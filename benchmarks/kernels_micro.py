@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (CPU: oracle paths; the Pallas kernels are TPU-
+target and validated in interpret mode by tests/test_kernels.py).
+
+Times the jnp oracle implementations and reports the *modeled* TPU kernel
+timings from the roofline (bytes/flops at v5e constants), so the CSV carries
+both a measured number and the number that matters for the deployment
+target.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import quantize_weight
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.lif_scan.ref import lif_scan_ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    # lif_scan oracle: T=100 window, 1024 neurons, batch 64
+    cur = jax.random.randint(jax.random.PRNGKey(0), (100, 64, 1024), -200, 300, jnp.int32)
+    f = jax.jit(lambda c: lif_scan_ref(c, 500, 153, 16, False))
+    us = _time(f, cur)
+    # modeled TPU time: one HBM pass over currents + spikes at 819 GB/s
+    model_us = (cur.size * 4 * 2 / 819e9) * 1e6
+    out.append(("kernels/lif_scan_oracle_T100_64x1024", us, f"modeled_tpu_us={model_us:.1f}"))
+
+    # quant matmul oracle (XLA-fused dequant): decode-shaped 8 x 4096 x 14336
+    w = jax.random.normal(jax.random.PRNGKey(1), (4096, 14336), jnp.float32) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 4096), jnp.float32).astype(jnp.bfloat16)
+    for bits in (8, 4):
+        qt = quantize_weight(w, bits)
+        f = jax.jit(lambda x, q=qt: quant_matmul_ref(x, q))
+        us = _time(f, x)
+        bytes_w = qt.q.size * 1  # int8 storage (packed for 4-bit)
+        model_us = (bytes_w / 819e9) * 1e6  # memory-bound decode matmul
+        out.append(
+            (f"kernels/quant_matmul_oracle_b{bits}_8x4096x14336", us, f"modeled_tpu_us={model_us:.1f};weight_mb={bytes_w/1e6:.1f}")
+        )
+    return out

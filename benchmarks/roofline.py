@@ -1,0 +1,93 @@
+"""Roofline report: renders EXPERIMENTS.md tables from the dry-run records.
+
+One row per (arch x shape) on the single-pod mesh (the assignment's roofline
+scope); multi-pod rows prove the pod axis lowers and are summarised
+separately.  ``us_per_call`` in the bench CSV is the modeled roofline-bound
+step time (the max of the three terms) in microseconds.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_records(mesh: str = "single", variant: str | None = None):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        v = r.get("variant", "baseline")
+        if variant is None and v != "baseline":
+            continue
+        if variant is not None and v != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs) -> str:
+    hdr = (
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+        "roofline frac | useful FLOPs ratio | fits HBM |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: {r.get('reason','')[:40]} | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+            f"{t['collective_s']:.3e} | {t['dominant'].replace('_s','')} | {t['roofline_fraction']:.2f} | "
+            f"{ratio:.2f} | {'yes' if r.get('fits_hbm') else 'NO'} |"
+        )
+    return hdr + "\n".join(rows)
+
+
+def worst_cells(recs, n=5):
+    ok = [r for r in recs if r["status"] == "ok"]
+    return sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])[:n]
+
+
+def most_collective_bound(recs, n=5):
+    ok = [r for r in recs if r["status"] == "ok"]
+    return sorted(
+        ok,
+        key=lambda r: r["roofline"]["collective_s"] / (sum(
+            r["roofline"][k] for k in ("compute_s", "memory_s", "collective_s")) + 1e-30),
+        reverse=True,
+    )[:n]
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    for r in load_records("single"):
+        if r["status"] != "ok":
+            if r["status"] == "skipped":
+                out.append((f"roofline/{r['arch']}/{r['shape']}", 0.0, f"skipped:{r.get('reason','')[:60]}"))
+            else:
+                out.append((f"roofline/{r['arch']}/{r['shape']}", 0.0, f"ERROR:{r.get('error','')[:80]}"))
+            continue
+        t = r["roofline"]
+        bound_us = t["roofline_bound_s"] * 1e6
+        out.append(
+            (
+                f"roofline/{r['arch']}/{r['shape']}",
+                bound_us,
+                f"dom={t['dominant'].replace('_s','')};frac={t['roofline_fraction']:.2f}"
+                f";compute={t['compute_s']:.3e};mem={t['memory_s']:.3e};coll={t['collective_s']:.3e}"
+                f";useful={r.get('useful_flops_ratio') and round(r['useful_flops_ratio'],2)}",
+            )
+        )
+    n_multi = len([r for r in load_records("multi") if r["status"] == "ok"])
+    out.append(("roofline/multi-pod-cells-ok", 0.0, f"count={n_multi}"))
+    return out

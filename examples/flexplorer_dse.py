@@ -1,0 +1,75 @@
+"""Flex-plorer end-to-end: train -> anneal precision -> emit deployment package.
+
+    PYTHONPATH=src python examples/flexplorer_dse.py
+
+The paper's full flow (Fig. 10): the Learning stage trains an ATA-F LIF
+network on the DVS stand-in; the Explorer anneals (ff bits, rec bits, leak
+precision) against the weighted LUT/FF/BRAM + bit-exact-accuracy cost; the
+"RTL Configurator" stage here emits the deployment package our framework's
+runtime consumes: chosen design-time parameters + quantized weight tables +
+encoded dataset sample, written under ``runs/flexplorer_pkg/``.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import hw_model
+from repro.core.flexplorer import annealer as annealer_lib
+from repro.core.flexplorer import cost as cost_lib
+from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.network import NetworkConfig
+from repro.core.snn_layer import LayerConfig, NeuronModel, Topology
+from repro.data.snn_datasets import dvs_like
+from repro.snn.train import train_snn
+
+
+def main():
+    ds = dvs_like(n=1408, T=20, seed=2)
+    train, test = ds.split()
+    net = NetworkConfig(
+        layers=(
+            LayerConfig(n_in=256, n_out=128, neuron=NeuronModel.LIF, topology=Topology.ATA_F, u_bits=16),
+            LayerConfig(n_in=128, n_out=11, neuron=NeuronModel.LIF, topology=Topology.FF, u_bits=16),
+        ),
+        n_steps=20,
+        name="dvs-ataf",
+    )
+    print("Learning stage: training ATA-F LIF on DVS stand-in...")
+    res = train_snn(net, train, epochs=6, batch_size=128, lr=2e-3, log_every=2)
+
+    print("Explorer stage: simulated annealing over (ff, rec, leak) precision...")
+    result = explore_snn(
+        net,
+        res.params,
+        test,
+        space=SNNSearchSpace(ff_bits=(4, 6, 8), rec_bits=(4, 6, 8), leak_bits=(3, 8)),
+        weights=cost_lib.CostWeights(c_hw=0.5, c_acc=0.5, c_lut=0.33, c_ff=0.33, c_bram=0.34),
+        anneal_cfg=annealer_lib.AnnealConfig(t_start=1.0, t_min=0.05, alpha=0.6, eval_divisor=3, seed=0),
+    )
+    report = result.report()
+    print("chosen configuration:", json.dumps(report["chosen"], indent=2, default=float))
+
+    out = pathlib.Path("runs/flexplorer_pkg")
+    out.mkdir(parents=True, exist_ok=True)
+    # deployment package: design-time params, quantized weights, encoded data
+    (out / "design.json").write_text(json.dumps({
+        "layers": [
+            {"n_in": lc.n_in, "n_out": lc.n_out, "neuron": lc.neuron.value,
+             "topology": lc.topology.value, "w_bits": lc.w_bits,
+             "w_rec_bits": lc.w_rec_bits, "leak_bits": lc.leak_bits,
+             "decay_register": lc.beta_code().decay_rate_register}
+            for lc in result.best_net.layers
+        ],
+        "resources": {k: float(report[k]) for k in ("lut", "ff", "bram", "logic_cells")},
+    }, indent=2))
+    np.savez(out / "weights_q.npz", **{
+        f"layer{i}_wff": np.asarray(q.w_ff) for i, q in enumerate(result.best_qparams)
+    })
+    np.save(out / "encoded_sample.npy", test.spikes[:16])
+    print(f"deployment package written to {out}/ (design.json, weights_q.npz, encoded_sample.npy)")
+
+
+if __name__ == "__main__":
+    main()

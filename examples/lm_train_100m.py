@@ -1,0 +1,61 @@
+"""End-to-end LM training driver: a ~100M-parameter stablelm-family model
+trained for a few hundred steps with the full production loop -- sharded
+steps, async checkpointing, automatic resume, straggler telemetry, and an
+injected node failure it recovers from.
+
+    PYTHONPATH=src python examples/lm_train_100m.py [--steps 300]
+
+Runs on CPU in ~10-20 minutes at the default 300 steps (use --steps 120 for
+a quicker pass).  The same TrainLoop drives the full-size configs on the
+production mesh (launch/train.py).
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import get_arch
+from repro.train.loop import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--run-dir", default="runs/lm100m")
+    args = ap.parse_args()
+
+    arch = get_arch("stablelm-1.6b")
+    # ~100M config of the same family: 12 x 512 with the arch's MHA/rope_frac
+    cfg = dataclasses.replace(
+        arch.reduced_config,
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, d_head=64,
+        d_ff=1408, vocab=8192,
+    )
+    arch = dataclasses.replace(arch, reduced_config=cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(arch.init_params(jax.random.PRNGKey(0), cfg)))
+    print(f"model: stablelm-family {n_params/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model} ff={cfg.d_ff} vocab={cfg.vocab})")
+
+    loop = TrainLoop(
+        arch_name="stablelm-1.6b",
+        seq_len=256,
+        global_batch=8,
+        mesh=make_host_mesh(),
+        run_dir=args.run_dir,
+        ckpt_every=50,
+        log_every=10,
+        fail_at_step=args.steps // 2,  # prove the restart path mid-run
+    )
+    loop.arch = arch
+    loop.cfg = cfg
+    out = loop.run(total_steps=args.steps)
+    print(json.dumps(out, indent=2))
+    print(f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} over {out['final_step']} steps "
+          f"with {out['failures']} recovered failure(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Coefficient Generator (CG): multiplier-free leak, bit-exact (paper section 4.1.2).
+
+The RTL realises ``x * k/256`` (k integer in [0, 255], or bypass for k = 256,
+i.e. the IF model's "no leak") as a gated sum of arithmetic right shifts:
+
+    DecayRate[8]   -> bypass (pass x through unchanged)
+    DecayRate[7]   -> x >> 1   (1/2)
+    DecayRate[6]   -> x >> 2   (1/4)
+    ...
+    DecayRate[0]   -> x >> 8   (1/256)
+
+so the realised factor is ``k / 256`` with 1/256 granularity; rounding a float
+decay factor to the nearest k keeps the *factor* error below 1/512 (paper's
+claim, asserted in tests).  The shifts are arithmetic (sign-extending), which
+is what `>>>` does in RTL; note floor semantics for negative operands.
+
+The DSE knob ``leak_bits`` (1..8) restricts how many shift taps are
+synthesised, i.e. k is restricted to multiples of ``2**(8 - leak_bits)``.
+In the RTL this corresponds to ``SelectionUnits[3:0]`` gating the four
+two-tap data blocks; ``selection_units(leak_bits)`` returns that mask.
+
+This module is the single source of truth for decay numerics: the bit-exact
+simulator, the Pallas ``lif_scan`` kernel and its jnp oracle all call
+:func:`apply_decay` / reimplement its exact shift set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixed_point import arithmetic_rshift
+
+__all__ = [
+    "DecayCode",
+    "encode_decay",
+    "decode_factor",
+    "apply_decay",
+    "apply_decay_float",
+    "selection_units",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecayCode:
+    """9-bit DecayRate register contents plus its design-time tap budget."""
+
+    k: int  # DecayRate[7:0]; realised factor is k/256
+    bypass: bool  # DecayRate[8]; True => factor 1.0 (IF model)
+    leak_bits: int  # number of synthesised shift taps (1..8)
+
+    @property
+    def decay_rate_register(self) -> int:
+        """The packed 9-bit register value DecayRate[8:0]."""
+        return (int(self.bypass) << 8) | self.k
+
+    @property
+    def factor(self) -> float:
+        return 1.0 if self.bypass else self.k / 256.0
+
+
+def selection_units(leak_bits: int) -> int:
+    """SelectionUnits[3:0]: which two-tap blocks ((1,2),(3,4),(5,6),(7,8)) exist."""
+    if not 0 <= leak_bits <= 8:
+        raise ValueError(f"leak_bits must be in [0, 8], got {leak_bits}")
+    n_blocks = (leak_bits + 1) // 2
+    return (1 << n_blocks) - 1
+
+
+def encode_decay(beta: float, leak_bits: int = 8) -> DecayCode:
+    """Round a float decay factor onto the CG's representable grid.
+
+    With ``leak_bits`` taps available the representable factors are multiples
+    of ``2**(8 - leak_bits) / 256``; beta == 1.0 maps to the bypass path.
+    """
+    if not 0.0 <= beta <= 1.0:
+        raise ValueError(f"decay factor must be in [0, 1], got {beta}")
+    if not 1 <= leak_bits <= 8:
+        raise ValueError(f"leak_bits must be in [1, 8], got {leak_bits}")
+    step = 1 << (8 - leak_bits)
+    k = int(round(beta * 256.0 / step)) * step
+    if k >= 256:
+        # beta rounds to 1.0: representable exactly via the bypass path.
+        return DecayCode(k=0, bypass=True, leak_bits=leak_bits)
+    return DecayCode(k=k, bypass=False, leak_bits=leak_bits)
+
+
+def decode_factor(code: DecayCode) -> float:
+    return code.factor
+
+
+def apply_decay(x, code: DecayCode):
+    """Bit-exact CG output for int32 input ``x`` (vectorised).
+
+    Mirrors the RTL: gate each selected shift path, sum with the tree adder.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    if code.bypass:
+        return x
+    acc = jnp.zeros_like(x)
+    for shift in range(1, 9):
+        bit = (code.k >> (8 - shift)) & 1
+        if bit:
+            acc = acc + arithmetic_rshift(x, shift)
+    return acc
+
+
+def apply_decay_float(x, code: DecayCode):
+    """Float reference of the *factor* (not of the floor-shift arithmetic)."""
+    return jnp.asarray(x, jnp.float32) * code.factor
+
+
+def max_value_error_bound(code: DecayCode) -> float:
+    """Upper bound on |apply_decay(x) - x*k/256| from floor-shift truncation.
+
+    Each selected tap truncates < 1 LSB, so the bound is the tap count.
+    Exposed for tests and for the DSE accuracy model's noise floor.
+    """
+    if code.bypass:
+        return 0.0
+    return float(bin(code.k).count("1"))
+
+
+def quantization_grid(leak_bits: int) -> np.ndarray:
+    """All representable decay factors at the given tap budget (plus bypass)."""
+    step = 1 << (8 - leak_bits)
+    return np.concatenate([np.arange(0, 256, step) / 256.0, [1.0]])

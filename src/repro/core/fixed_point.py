@@ -1,0 +1,116 @@
+"""Fixed-point arithmetic contracts shared by the bit-exact simulator and kernels.
+
+Flexi-NeurA stores every on-chip quantity as a signed fixed-point integer whose
+bit-width is a design-time parameter:
+
+* synaptic weights           -- ``w_bits``  (feed-forward) / ``w_rec_bits`` (recurrent)
+* membrane potential ``U``   -- ``u_bits``
+* synaptic current ``I_syn`` -- ``i_bits``
+
+Thresholds and reset values are *automatically rescaled* to the selected
+precision (paper section 4): the float threshold theta is mapped through the same
+scale as the weights so that the integer comparison ``U >= theta_q`` is
+equivalent to the float comparison up to quantization error.
+
+All integer arithmetic here is performed in int32 with explicit saturation to
+the declared register width; this mirrors a saturating hardware accumulator
+and keeps the simulator's numerics well-defined for any bit-width <= 24.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantSpec",
+    "quantize_symmetric",
+    "dequantize",
+    "int_min",
+    "int_max",
+    "saturate",
+    "sat_add",
+    "arithmetic_rshift",
+]
+
+
+def int_min(bits: int) -> int:
+    """Smallest representable signed integer at ``bits`` width."""
+    return -(1 << (bits - 1))
+
+
+def int_max(bits: int) -> int:
+    """Largest representable signed integer at ``bits`` width."""
+    return (1 << (bits - 1)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Symmetric signed fixed-point quantization spec.
+
+    ``scale`` maps float -> integer: ``q = clip(round(x * scale))``.
+    The same scale is applied to thresholds/resets so integer dynamics mirror
+    the float dynamics (paper: "Threshold and reset values are automatically
+    rescaled to match the selected precision").
+    """
+
+    bits: int
+    scale: float
+
+    @property
+    def qmin(self) -> int:
+        return int_min(self.bits)
+
+    @property
+    def qmax(self) -> int:
+        return int_max(self.bits)
+
+    def quantize(self, x):
+        return quantize_symmetric(x, self.bits, self.scale)
+
+    def dequantize(self, q):
+        return dequantize(q, self.scale)
+
+
+def make_spec_from_absmax(x, bits: int, margin: float = 1.0) -> QuantSpec:
+    """Build a QuantSpec so that ``margin * max|x|`` maps to the integer max."""
+    absmax = float(np.max(np.abs(np.asarray(x)))) if np.size(np.asarray(x)) else 1.0
+    absmax = max(absmax * margin, 1e-12)
+    return QuantSpec(bits=bits, scale=int_max(bits) / absmax)
+
+
+def quantize_symmetric(x, bits: int, scale: float):
+    """Round-to-nearest-even symmetric quantization with clipping."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) * scale)
+    return jnp.clip(q, int_min(bits), int_max(bits)).astype(jnp.int32)
+
+
+def dequantize(q, scale: float):
+    return jnp.asarray(q, jnp.float32) / scale
+
+
+def saturate(x, bits: int):
+    """Clamp an int32 value into the signed ``bits``-wide register range."""
+    return jnp.clip(x, int_min(bits), int_max(bits))
+
+
+def sat_add(a, b, bits: int):
+    """Saturating signed add: models the hardware accumulator at ``bits`` width.
+
+    Inputs are int32 whose magnitudes fit well inside int32 (bits <= 24), so
+    the int32 addition itself never wraps; only the register clamp applies.
+    """
+    return saturate(a + b, bits)
+
+
+def arithmetic_rshift(x, n: int):
+    """Arithmetic shift right on int32 (floor division by 2**n), as in RTL.
+
+    jnp's ``>>`` on signed ints is an arithmetic shift; kept as a named helper
+    so the simulator/kernels/oracle all share one definition.
+    """
+    return jnp.asarray(x, jnp.int32) >> n

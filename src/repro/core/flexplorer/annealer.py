@@ -1,0 +1,129 @@
+"""Simulated annealing over a discrete configuration space (paper Listing 1).
+
+Faithful to the paper's procedure:
+
+* enumerate all candidates consistent with the user's bounds up front,
+* pre-compute and cache the hardware cost of every candidate,
+* anneal: from a random start, probe ``|cfgs| / k`` neighbours per
+  temperature (k = user's "evaluation divisor"), where a neighbour changes
+  exactly one knob to an adjacent value,
+* accept better moves always, worse moves with probability exp(-delta/T),
+* geometric cooling T <- alpha * T until T_min; return the incumbent best.
+
+Accuracy evaluations are cached (they dominate runtime -- the paper
+JIT-compiles them with Numba; our evaluator is jax.jit-compiled instead).
+
+The annealer is generic: knobs are named tuples of discrete values, and the
+caller supplies ``hw_cost_fn(cfg)`` and ``acc_fn(cfg)`` callbacks, so the
+same machinery drives both the SNN precision search and the LM-scale
+precision/roofline search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["AnnealConfig", "AnnealResult", "enumerate_configs", "simulated_annealing"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnealConfig:
+    t_start: float = 1.0
+    t_min: float = 1e-3
+    alpha: float = 0.85
+    eval_divisor: int = 2  # the paper's k: probe |cfgs|/k neighbours per temp
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class AnnealResult:
+    best: tuple
+    best_cost: float
+    best_breakdown: dict
+    evaluations: int
+    trace: list[dict]  # every probed candidate: cfg, total/hw/acc cost
+    cache: dict  # cfg -> (total, hw, acc_cost, accuracy)
+
+
+def enumerate_configs(knobs: Mapping[str, Sequence]) -> tuple[tuple[str, ...], list[tuple]]:
+    """Cartesian product of knob value lists -> (knob names, candidate tuples)."""
+    names = tuple(knobs.keys())
+    values = [list(v) for v in knobs.values()]
+    return names, list(itertools.product(*values))
+
+
+def _neighbor(cfg: tuple, knob_values: list[list], rng: np.random.Generator) -> tuple:
+    """Change exactly one knob to an adjacent value in its ordered list."""
+    cfg = list(cfg)
+    movable = [i for i, vals in enumerate(knob_values) if len(vals) > 1]
+    i = int(rng.choice(movable))
+    vals = knob_values[i]
+    j = vals.index(cfg[i])
+    if j == 0:
+        j2 = 1
+    elif j == len(vals) - 1:
+        j2 = j - 1
+    else:
+        j2 = j + int(rng.choice([-1, 1]))
+    cfg[i] = vals[j2]
+    return tuple(cfg)
+
+
+def simulated_annealing(
+    knobs: Mapping[str, Sequence],
+    hw_cost_fn: Callable[[tuple], float],
+    acc_fn: Callable[[tuple], float],
+    acc_cost_fn: Callable[[float], float],
+    anneal: AnnealConfig = AnnealConfig(),
+) -> AnnealResult:
+    names, cfgs = enumerate_configs(knobs)
+    knob_values = [list(v) for v in knobs.values()]
+    rng = np.random.default_rng(anneal.seed)
+
+    # Pre-compute hardware cost for every candidate (paper lines 8-13).
+    hw_cache = {cfg: float(hw_cost_fn(cfg)) for cfg in cfgs}
+    cache: dict[tuple, tuple] = {}
+    trace: list[dict] = []
+
+    def evaluate(cfg: tuple) -> float:
+        if cfg not in cache:
+            accuracy = float(acc_fn(cfg))
+            a_cost = float(acc_cost_fn(accuracy))
+            total = hw_cache[cfg] + a_cost
+            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy)
+            trace.append(
+                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy)
+            )
+        return cache[cfg][0]
+
+    cur = cfgs[int(rng.integers(len(cfgs)))]
+    cur_cost = evaluate(cur)
+    best, best_cost = cur, cur_cost
+
+    T = anneal.t_start
+    n_per_temp = max(1, math.ceil(len(cfgs) / anneal.eval_divisor))
+    while T > anneal.t_min:
+        for _ in range(n_per_temp):
+            nbr = _neighbor(cur, knob_values, rng)
+            nbr_cost = evaluate(nbr)
+            delta = nbr_cost - cur_cost
+            if delta <= 0 or rng.random() <= math.exp(-delta / T):
+                cur, cur_cost = nbr, nbr_cost
+                if cur_cost < best_cost:
+                    best, best_cost = cur, cur_cost
+        T *= anneal.alpha
+
+    total, hw, a_cost, accuracy = cache[best]
+    return AnnealResult(
+        best=best,
+        best_cost=best_cost,
+        best_breakdown=dict(zip(names, best)) | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy},
+        evaluations=len(cache),
+        trace=trace,
+        cache=cache,
+    )

@@ -1,0 +1,60 @@
+"""Flex-plorer cost functions (paper Eqs. 4-7).
+
+    HwCost    = C_H * (C_LUT*LUT_n + C_FF*FF_n + C_BRAM*BRAM_n)
+    AccCost   = C_A * (1 - hardware_aware_accuracy)
+    TotalCost = HwCost + AccCost        with C_H + C_A = 1, C_LUT+C_FF+C_BRAM = 1
+
+Resource terms are normalised by the target device capacity (default: the
+paper's Xilinx Zynq-7000 XC7Z020).  The same weighted-sum structure is reused
+at LM scale with roofline terms standing in for LUT/FF/BRAM (see
+``repro.core.flexplorer.explorer.LMCandidateEvaluator``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hw_model import CoreResources
+
+__all__ = ["DeviceCapacity", "XC7Z020", "CostWeights", "hw_cost", "acc_cost", "total_cost"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCapacity:
+    luts: float
+    ffs: float
+    brams: float
+    name: str = "device"
+
+
+XC7Z020 = DeviceCapacity(luts=53_200, ffs=106_400, brams=140, name="XC7Z020")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostWeights:
+    c_hw: float = 0.5
+    c_acc: float = 0.5
+    c_lut: float = 0.33
+    c_ff: float = 0.33
+    c_bram: float = 0.34
+
+    def __post_init__(self):
+        if abs(self.c_hw + self.c_acc - 1.0) > 1e-9:
+            raise ValueError("C_H + C_A must equal 1 (paper Eq. 7)")
+        if abs(self.c_lut + self.c_ff + self.c_bram - 1.0) > 1e-9:
+            raise ValueError("C_LUT + C_FF + C_BRAM must equal 1 (paper Eq. 7)")
+
+
+def hw_cost(res: CoreResources, w: CostWeights, dev: DeviceCapacity = XC7Z020) -> float:
+    lut_n = res.lut / dev.luts
+    ff_n = res.ff / dev.ffs
+    bram_n = res.bram / dev.brams
+    return w.c_hw * (w.c_lut * lut_n + w.c_ff * ff_n + w.c_bram * bram_n)
+
+
+def acc_cost(hardware_aware_accuracy: float, w: CostWeights) -> float:
+    return w.c_acc * (1.0 - hardware_aware_accuracy)
+
+
+def total_cost(res: CoreResources, accuracy: float, w: CostWeights, dev: DeviceCapacity = XC7Z020) -> float:
+    return hw_cost(res, w, dev) + acc_cost(accuracy, w)

@@ -1,0 +1,96 @@
+"""Flex-plorer end-to-end DSE drivers.
+
+SNN mode (paper-faithful): given a *trained* network, anneal over
+(feed-forward weight bits, recurrent weight bits, leak precision); each
+candidate is quantized and scored by the bit-exact hardware simulator
+(``run_int``) on a held-out set, plus the analytical LUT/FF/BRAM model.
+
+The result carries everything the RTL Configurator stage would consume:
+the chosen design-time parameters, quantized weight tables, and the cost
+trace for the Fig.-11-style plot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import hw_model
+from repro.core.flexplorer import annealer as annealer_lib
+from repro.core.flexplorer import cost as cost_lib
+from repro.core.network import NetworkConfig, quantize_params, run_int
+from repro.data.snn_datasets import SpikeDataset
+from repro.snn.train import eval_int
+
+__all__ = ["SNNSearchSpace", "ExplorationResult", "explore_snn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNSearchSpace:
+    ff_bits: Sequence[int] = (4, 6, 8)
+    rec_bits: Sequence[int] = (4, 6, 8)
+    leak_bits: Sequence[int] = (3, 8)
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    best_net: NetworkConfig
+    best_qparams: list
+    anneal: annealer_lib.AnnealResult
+    weights: cost_lib.CostWeights
+
+    def report(self) -> dict:
+        res = hw_model.network_resources(self.best_net)
+        return {
+            "chosen": self.anneal.best_breakdown,
+            "lut": res.lut,
+            "ff": res.ff,
+            "bram": res.bram,
+            "logic_cells": res.logic_cells,
+            "evaluations": self.anneal.evaluations,
+        }
+
+
+def explore_snn(
+    net: NetworkConfig,
+    float_params: list,
+    eval_ds: SpikeDataset,
+    space: SNNSearchSpace = SNNSearchSpace(),
+    weights: cost_lib.CostWeights = cost_lib.CostWeights(),
+    device: cost_lib.DeviceCapacity = cost_lib.XC7Z020,
+    anneal_cfg: annealer_lib.AnnealConfig = annealer_lib.AnnealConfig(),
+    eval_batch: int = 512,
+) -> ExplorationResult:
+    """Anneal precision knobs for a trained SNN (the paper's Explorer stage)."""
+    any_recurrent = any(lc.is_recurrent for lc in net.layers)
+    knobs = {"ff_bits": list(space.ff_bits)}
+    if any_recurrent:
+        knobs["rec_bits"] = list(space.rec_bits)
+    knobs["leak_bits"] = list(space.leak_bits)
+
+    def cfg_to_net(cfg: tuple) -> NetworkConfig:
+        kv = dict(zip(knobs.keys(), cfg))
+        return net.replace_precisions(
+            w_bits=kv["ff_bits"],
+            w_rec_bits=kv.get("rec_bits", kv["ff_bits"]),
+            leak_bits=kv["leak_bits"],
+        )
+
+    def hw_cost_fn(cfg: tuple) -> float:
+        res = hw_model.network_resources(cfg_to_net(cfg))
+        return cost_lib.hw_cost(res, weights, device)
+
+    def acc_fn(cfg: tuple) -> float:
+        cand = cfg_to_net(cfg)
+        qparams, _ = quantize_params(cand, float_params)
+        return eval_int(cand, qparams, eval_ds, batch_size=eval_batch)
+
+    def acc_cost_fn(accuracy: float) -> float:
+        return cost_lib.acc_cost(accuracy, weights)
+
+    result = annealer_lib.simulated_annealing(knobs, hw_cost_fn, acc_fn, acc_cost_fn, anneal_cfg)
+    best_net = cfg_to_net(result.best)
+    best_qparams, _ = quantize_params(best_net, float_params)
+    return ExplorationResult(best_net=best_net, best_qparams=best_qparams, anneal=result, weights=weights)

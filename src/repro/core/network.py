@@ -1,0 +1,210 @@
+"""Multi-core Flexi-NeurA network: layer-to-core mapping and full simulation.
+
+The paper maps each hidden/output layer to a dedicated processing core wired
+through AER packets (Fig. 4).  Functionally the system is a layered SNN
+unrolled over time; this module provides
+
+* :func:`init_float_params` / :func:`quantize_params` -- the train->deploy path
+  (float weights from BPTT, quantized to each core's fixed-point widths, with
+  thresholds rescaled onto the same grid),
+* :func:`run_float`  -- differentiable unrolled simulation (training / DSE),
+* :func:`run_int`    -- bit-exact hardware-faithful simulation (deployment
+  accuracy, the DSE's "hardware-aware accuracy"),
+
+plus per-layer spike statistics that feed the latency/energy model in
+``repro.core.hw_model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixed_point import int_max
+from repro.core.snn_layer import (
+    FloatLayerParams,
+    IntLayerParams,
+    LayerConfig,
+    LayerState,
+    Topology,
+    float_layer_init,
+    float_layer_step,
+    int_layer_init,
+    int_layer_step,
+)
+
+__all__ = [
+    "NetworkConfig",
+    "init_float_params",
+    "quantize_params",
+    "run_float",
+    "run_int",
+    "SimRecord",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """A stack of cores plus the inference window length."""
+
+    layers: tuple[LayerConfig, ...]
+    n_steps: int
+    name: str = "snn"
+
+    def __post_init__(self):
+        for prev, nxt in zip(self.layers[:-1], self.layers[1:]):
+            if prev.n_out != nxt.n_in:
+                raise ValueError(
+                    f"layer size mismatch: {prev.n_out} -> {nxt.n_in} in {self.name}"
+                )
+
+    @property
+    def n_in(self) -> int:
+        return self.layers[0].n_in
+
+    @property
+    def n_classes(self) -> int:
+        return self.layers[-1].n_out
+
+    def replace_precisions(self, w_bits=None, w_rec_bits=None, leak_bits=None):
+        """A new config with uniformly overridden DSE knobs (None = keep)."""
+        new_layers = []
+        for lc in self.layers:
+            new_layers.append(
+                dataclasses.replace(
+                    lc,
+                    w_bits=w_bits if w_bits is not None else lc.w_bits,
+                    w_rec_bits=w_rec_bits if w_rec_bits is not None else lc.w_rec_bits,
+                    leak_bits=leak_bits if leak_bits is not None else lc.leak_bits,
+                )
+            )
+        return dataclasses.replace(self, layers=tuple(new_layers))
+
+
+def init_float_params(key, net: NetworkConfig) -> list[FloatLayerParams]:
+    params = []
+    for cfg in net.layers:
+        key, k_ff, k_rec = jax.random.split(key, 3)
+        # SNN-Torch style: weights sized so a typical step's input current is
+        # O(threshold); uniform(+-1/sqrt(fan_in)) as in torch.nn.Linear.
+        lim = 1.0 / np.sqrt(cfg.n_in)
+        w_ff = jax.random.uniform(k_ff, (cfg.n_in, cfg.n_out), jnp.float32, -lim, lim)
+        if cfg.topology == Topology.ATA_T:
+            rlim = 1.0 / np.sqrt(cfg.n_out)
+            w_rec = jax.random.uniform(
+                k_rec, (cfg.n_out, cfg.n_out), jnp.float32, -rlim, rlim
+            )
+        elif cfg.topology == Topology.ATA_F:
+            w_rec = jnp.asarray(0.1, jnp.float32)  # shared self-weight register
+        else:
+            w_rec = jnp.zeros((0,), jnp.float32)
+        params.append(
+            FloatLayerParams(w_ff=w_ff, w_rec=w_rec, theta=jnp.asarray(cfg.threshold))
+        )
+    return params
+
+
+def quantize_params(
+    net: NetworkConfig, params: Sequence[FloatLayerParams]
+) -> tuple[list[IntLayerParams], list[float]]:
+    """Quantize trained float weights onto each core's fixed-point grid.
+
+    One scale per core: feed-forward and recurrent contributions accumulate
+    into the same register, so they must share a scale; the scale is chosen
+    as the tightest one that (a) fits both weight groups in their respective
+    bit-widths and (b) keeps the rescaled threshold inside the *membrane
+    register* with integration headroom -- the paper's automatic
+    threshold/reset rescaling.  Without (b), a narrow u_bits register can
+    place theta_q above the saturation point and the core goes silent.
+    """
+    qparams, scales = [], []
+    for cfg, p in zip(net.layers, params):
+        absmax_ff = float(jnp.max(jnp.abs(p.w_ff))) or 1e-12
+        scale = int_max(cfg.w_bits) / absmax_ff
+        if cfg.topology == Topology.ATA_T and p.w_rec.size:
+            absmax_rec = float(jnp.max(jnp.abs(p.w_rec))) or 1e-12
+            scale = min(scale, int_max(cfg.w_rec_bits) / absmax_rec)
+        elif cfg.topology == Topology.ATA_F:
+            absmax_rec = float(jnp.abs(p.w_rec)) or 1e-12
+            scale = min(scale, int_max(cfg.w_rec_bits) / absmax_rec)
+        # membrane-register constraint: theta_q at half the register leaves
+        # 2x headroom for integration past threshold before saturation
+        theta = float(p.theta) or 1e-12
+        scale = min(scale, 0.5 * int_max(cfg.u_bits) / theta)
+
+        w_ff_q = jnp.clip(
+            jnp.round(p.w_ff * scale), -int_max(cfg.w_bits) - 1, int_max(cfg.w_bits)
+        ).astype(jnp.int32)
+        if cfg.topology in (Topology.ATA_T, Topology.ATA_F):
+            w_rec_q = jnp.clip(
+                jnp.round(p.w_rec * scale),
+                -int_max(cfg.w_rec_bits) - 1,
+                int_max(cfg.w_rec_bits),
+            ).astype(jnp.int32)
+        else:
+            w_rec_q = jnp.zeros((0,), jnp.int32)
+        theta_q = jnp.round(p.theta * scale).astype(jnp.int32)
+        qparams.append(IntLayerParams(w_ff=w_ff_q, w_rec=w_rec_q, theta_q=theta_q))
+        scales.append(scale)
+    return qparams, scales
+
+
+@dataclasses.dataclass
+class SimRecord:
+    """Outputs of a full-window simulation.
+
+    spike_counts -- [batch, n_classes] output-layer spike totals (rate code)
+    layer_spikes -- list over layers of [T, batch] per-step spike totals
+                    (events emitted by that layer; feeds the latency model)
+    """
+
+    spike_counts: jax.Array
+    layer_spikes: list[jax.Array]
+
+    def predictions(self):
+        return jnp.argmax(self.spike_counts, axis=-1)
+
+
+def _run(net, params, spikes_in, init_fn, step_fn):
+    batch = spikes_in.shape[1]
+    states = [init_fn(cfg, batch) for cfg in net.layers]
+
+    def one_step(states, s_t):
+        new_states = []
+        x = s_t
+        emitted = []
+        for cfg, p, st in zip(net.layers, params, states):
+            st, x = step_fn(cfg, p, st, x)
+            new_states.append(st)
+            emitted.append(jnp.sum(x, axis=-1))  # events per sample this step
+        return new_states, (x, jnp.stack(emitted, axis=0))
+
+    states, (out_spikes, emitted) = jax.lax.scan(one_step, states, spikes_in)
+    counts = jnp.sum(out_spikes, axis=0)
+    layer_spikes = [emitted[:, i, :] for i in range(len(net.layers))]
+    return SimRecord(spike_counts=counts, layer_spikes=layer_spikes)
+
+
+def run_int(
+    net: NetworkConfig, qparams: Sequence[IntLayerParams], spikes_in
+) -> SimRecord:
+    """Bit-exact deployment simulation. ``spikes_in``: int [T, batch, n_in]."""
+    return _run(net, list(qparams), spikes_in.astype(jnp.int32), int_layer_init, int_layer_step)
+
+
+def run_float(
+    net: NetworkConfig,
+    params: Sequence[FloatLayerParams],
+    spikes_in,
+    spike_fn,
+) -> SimRecord:
+    """Differentiable simulation. ``spikes_in``: float {0,1} [T, batch, n_in]."""
+
+    def step(cfg, p, st, x):
+        return float_layer_step(cfg, p, st, x, spike_fn)
+
+    return _run(net, list(params), spikes_in.astype(jnp.float32), float_layer_init, step)

@@ -1,0 +1,180 @@
+"""LM-scale precision machinery: quantized tensors, policies, quantized matmul.
+
+This is the paper's design-time bit-width configurability lifted to the LM
+framework: every large 2-D weight can be stored at a reduced precision chosen
+per layer group by the Flex-plorer annealer (``flexplorer.explorer``), and the
+matmul executes against the quantized representation.
+
+Storage formats (TPU HBM is byte-addressable, unlike FPGA BRAM rows, so the
+*storage* grid is bytes even when the *value* grid is narrower):
+
+* bits = 8            -> int8, per-output-channel symmetric scale
+* bits in {5, 6, 7}   -> value grid of 2^bits levels stored in int8
+                         (accuracy knob; HBM bytes equal int8)
+* bits = 4            -> two nibbles packed per int8 (true 2x byte saving)
+* bits = 16 / None    -> plain bf16/f32 array (no quantization)
+
+``qdot(x, w)`` contracts x's last axis with w's first and transparently
+handles plain arrays or :class:`QTensor`; when
+``repro.kernels.quant_matmul`` is enabled the 4/8-bit paths run through the
+Pallas kernel, otherwise an XLA-fused dequantize-matmul.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QTensor", "quantize_weight", "dequantize_weight", "qdot", "PrecisionPolicy", "quantize_tree"]
+
+# Toggled by benchmarks / launch flags; kernels register themselves here to
+# avoid a circular import (kernels.quant_matmul.ops imports this module).
+_PALLAS_QDOT = None  # callable (x, qtensor) -> array, or None
+
+
+def register_pallas_qdot(fn) -> None:
+    global _PALLAS_QDOT
+    _PALLAS_QDOT = fn
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Symmetric per-output-channel quantized 2-D weight [K, N]."""
+
+    q: jax.Array  # int8 [K, N] (bits>=5) or packed int8 [K, N//2] (bits=4)
+    scale: jax.Array  # f32 [N]
+    bits: int  # value precision (static)
+    shape: tuple[int, ...]  # logical (K, N) (static)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.bits, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        bits, shape = aux
+        return cls(q=q, scale=scale, bits=bits, shape=shape)
+
+    @property
+    def storage_bytes(self) -> int:
+        return self.q.size * self.q.dtype.itemsize + self.scale.size * 4
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def pack_int4(values):
+    """int8 values in [-8, 7], last axis even -> packed int8 [..., N/2]."""
+    lo = values[..., 0::2] & 0xF
+    hi = values[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed):
+    """packed int8 [..., N/2] -> int8 values [..., N] (sign-extended)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed.astype(jnp.uint8) >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def quantize_weight(w, bits: int) -> QTensor:
+    """Quantize a [K, N] float weight to ``bits`` (per-column symmetric)."""
+    if w.ndim != 2:
+        raise ValueError(f"quantize_weight expects 2-D weights, got {w.shape}")
+    if not 4 <= bits <= 8:
+        raise ValueError(f"bits must be in [4, 8], got {bits}")
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=0)  # [N]
+    scale = absmax / _qmax(bits) + 1e-12
+    q = jnp.clip(jnp.round(wf / scale), -_qmax(bits) - 1, _qmax(bits)).astype(jnp.int8)
+    if bits == 4:
+        if w.shape[1] % 2:
+            raise ValueError("int4 packing requires an even output dim")
+        return QTensor(q=pack_int4(q), scale=scale, bits=4, shape=tuple(w.shape))
+    return QTensor(q=q, scale=scale, bits=bits, shape=tuple(w.shape))
+
+
+def dequantize_weight(t: QTensor, dtype=jnp.bfloat16):
+    q = unpack_int4(t.q) if t.bits == 4 else t.q
+    return (q.astype(jnp.float32) * t.scale[None, :]).astype(dtype)
+
+
+def qdot(x, w):
+    """Contract x's last axis with w's first; w may be a QTensor."""
+    if isinstance(w, QTensor):
+        if _PALLAS_QDOT is not None:
+            return _PALLAS_QDOT(x, w)
+        wd = dequantize_weight(w, x.dtype)
+        return jnp.einsum("...k,kn->...n", x, wd)
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Policies over parameter trees
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Maps parameter paths (regex, first match wins) to bit-widths.
+
+    ``{"mlp/.*": 4, "attn/.*": 8}`` quantizes MLP weights to 4 bits and
+    attention projections to 8; unmatched leaves stay at full precision.
+    This is the LM analogue of the paper's per-core (ff_bits, rec_bits)
+    design-time parameters, and the annealer's search space.
+    """
+
+    rules: tuple[tuple[str, int | None], ...] = ()
+
+    def bits_for(self, path: str) -> int | None:
+        for pattern, bits in self.rules:
+            if re.search(pattern, path):
+                return bits
+        return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_tree(params, policy: PrecisionPolicy):
+    """Apply a policy to a parameter pytree; 2-D+ leaves only.
+
+    Stacked-layer leaves [L, K, N] are quantized per layer slice (vmapped
+    scale computation) by folding L into the scale's leading axis.
+    """
+
+    def visit(path, leaf):
+        bits = policy.bits_for(_path_str(path))
+        if bits is None or bits >= 16 or not hasattr(leaf, "ndim"):
+            return leaf
+        if leaf.ndim == 2:
+            return quantize_weight(leaf, bits)
+        if leaf.ndim == 3:  # stacked layers: quantize each slice
+            qts = [quantize_weight(leaf[i], bits) for i in range(leaf.shape[0])]
+            return QTensor(
+                q=jnp.stack([t.q for t in qts]),
+                scale=jnp.stack([t.scale for t in qts]),
+                bits=bits,
+                shape=tuple(leaf.shape),
+            )
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,252 @@
+"""Per-core (= per-layer) SNN semantics: bit-exact integer and float variants.
+
+One Flexi-NeurA core implements one layer.  The hardware processes a time
+step in two phases (paper section 4.1.5):
+
+  Phase A -- spike integration.  Each incoming ASPL event (a spike from the
+  previous layer) adds the corresponding synaptic-weight column into the
+  destination state: ``U`` for IF/LIF, ``I_syn`` for the Synaptic model.
+  On EOTS, recurrent ASCL events (this layer's own spikes from the *previous*
+  step) are integrated the same way (dense ``W_rec`` for ATA-T; a single
+  shared self-weight register for ATA-F).
+
+  Phase B -- leak / spike generation.  Neurons are swept sequentially by the
+  time-multiplexed datapath; per neuron:
+      Synaptic:  u_tmp = sat(U + I_syn)           (otherwise u_tmp = U)
+      if u_tmp >= theta:  spike; U <- reset(u_tmp)   (reset-to-zero / by-subtract)
+      else:               U <- CG_beta(u_tmp)        (no decay on the reset path)
+      Synaptic:  I_syn <- CG_alpha(I_syn)            (decays every step)
+
+The *vectorised* integer step below reproduces these numerics exactly
+provided no intermediate event-by-event accumulation saturates (integration
+is order-dependent only under saturation; ``repro.core.events`` provides the
+strict per-event reference used by property tests to check this contract).
+
+Timing convention: a spike generated in phase B of step ``t`` is the input
+that the next layer integrates at its step ``t`` (cores run pipelined, one
+step apart in wall-clock but aligned in step index), and is this layer's own
+recurrent input at step ``t + 1`` -- matching SNN-Torch's unrolling, which
+the paper trains against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coeff_gen
+from repro.core.coeff_gen import DecayCode
+from repro.core.fixed_point import saturate
+
+__all__ = [
+    "NeuronModel",
+    "ResetMode",
+    "Topology",
+    "LayerConfig",
+    "IntLayerParams",
+    "LayerState",
+    "int_layer_init",
+    "int_layer_step",
+    "float_layer_init",
+    "float_layer_step",
+]
+
+
+class NeuronModel(str, enum.Enum):
+    IF = "if"  # realised as LIF with the CG bypass path (no leak)
+    LIF = "lif"
+    SYNAPTIC = "synaptic"
+
+
+class ResetMode(str, enum.Enum):
+    ZERO = "zero"
+    SUBTRACT = "subtract"
+
+
+class Topology(str, enum.Enum):
+    FF = "ff"  # feed-forward only
+    ATA_F = "ata_f"  # self-feedback only (one shared weight register)
+    ATA_T = "ata_t"  # dense intra-layer recurrence
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerConfig:
+    """Design-time parameters of one Flexi-NeurA core (pre-synthesis)."""
+
+    n_in: int
+    n_out: int
+    neuron: NeuronModel = NeuronModel.LIF
+    topology: Topology = Topology.FF
+    reset: ResetMode = ResetMode.SUBTRACT
+    # Fixed-point widths (the Flex-plorer DSE knobs).
+    w_bits: int = 6
+    w_rec_bits: int = 6
+    u_bits: int = 16
+    i_bits: int = 16
+    leak_bits: int = 8
+    # Float dynamics (trained / user-chosen); quantized on deployment.
+    beta: float = 0.95  # membrane leak
+    alpha: float = 0.90  # synaptic-current leak (Synaptic model only)
+    threshold: float = 1.0
+
+    def __post_init__(self):
+        if self.n_in <= 0 or self.n_out <= 0:
+            raise ValueError("layer sizes must be positive")
+        if self.n_out > 256 or self.n_in > 256:
+            raise ValueError(
+                "a Flexi-NeurA core supports at most 256 neurons per layer "
+                f"(got n_in={self.n_in}, n_out={self.n_out}); split the layer "
+                "across cores or reduce it as the paper does for its datasets"
+            )
+        for name in ("w_bits", "w_rec_bits"):
+            b = getattr(self, name)
+            if not 2 <= b <= 16:
+                raise ValueError(f"{name} must be in [2, 16], got {b}")
+        for name in ("u_bits", "i_bits"):
+            b = getattr(self, name)
+            if not 4 <= b <= 24:
+                raise ValueError(f"{name} must be in [4, 24], got {b}")
+
+    @property
+    def is_recurrent(self) -> bool:
+        return self.topology in (Topology.ATA_F, Topology.ATA_T)
+
+    @property
+    def effective_beta(self) -> float:
+        # The IF model is the LIF datapath with the CG bypass engaged.
+        return 1.0 if self.neuron == NeuronModel.IF else self.beta
+
+    def beta_code(self) -> DecayCode:
+        return coeff_gen.encode_decay(self.effective_beta, self.leak_bits)
+
+    def alpha_code(self) -> DecayCode:
+        return coeff_gen.encode_decay(self.alpha, self.leak_bits)
+
+
+class IntLayerParams(NamedTuple):
+    """Quantized runtime parameters (the SPI-loaded memories/registers)."""
+
+    w_ff: jax.Array  # int32 [n_in, n_out]
+    w_rec: jax.Array  # int32 [n_out, n_out] (ATA-T) | [] scalar (ATA-F) | [0] (FF)
+    theta_q: jax.Array  # int32 scalar
+    # Decay codes are static python (design/config-time), carried on LayerConfig.
+
+
+class FloatLayerParams(NamedTuple):
+    w_ff: jax.Array  # f32 [n_in, n_out]
+    w_rec: jax.Array  # f32 [n_out, n_out] | scalar | [0]
+    theta: jax.Array  # f32 scalar
+
+
+class LayerState(NamedTuple):
+    u: jax.Array  # membrane potential  [batch, n_out]
+    i_syn: jax.Array  # synaptic current [batch, n_out] (zeros-shaped if unused)
+    prev_spk: jax.Array  # this layer's spikes from the previous step [batch, n_out]
+
+
+def _rec_weight_shape(cfg: LayerConfig):
+    if cfg.topology == Topology.ATA_T:
+        return (cfg.n_out, cfg.n_out)
+    if cfg.topology == Topology.ATA_F:
+        return ()  # single shared self-weight register (SPI ALL_TO_ALL_FALSE_WEIGHT)
+    return (0,)
+
+
+def int_layer_init(cfg: LayerConfig, batch: int) -> LayerState:
+    z = jnp.zeros((batch, cfg.n_out), jnp.int32)
+    return LayerState(u=z, i_syn=z, prev_spk=z)
+
+
+def float_layer_init(cfg: LayerConfig, batch: int) -> LayerState:
+    z = jnp.zeros((batch, cfg.n_out), jnp.float32)
+    return LayerState(u=z, i_syn=z, prev_spk=z)
+
+
+def _integrate_int(cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in):
+    """Phase A: accumulate weighted spikes into the integration target."""
+    s_in_i = s_in.astype(jnp.int32)
+    acc = jnp.einsum("bi,io->bo", s_in_i, params.w_ff)  # {0,1} matmul, int32
+    if cfg.topology == Topology.ATA_T:
+        acc = acc + jnp.einsum("bi,io->bo", state.prev_spk, params.w_rec)
+    elif cfg.topology == Topology.ATA_F:
+        acc = acc + state.prev_spk * params.w_rec
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        return state.u, saturate(state.i_syn + acc, cfg.i_bits)
+    return saturate(state.u + acc, cfg.u_bits), state.i_syn
+
+
+def int_layer_step(
+    cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in
+) -> tuple[LayerState, jax.Array]:
+    """One bit-exact hardware time step. Returns (new_state, spikes int32)."""
+    beta_code = cfg.beta_code()
+    u, i_syn = _integrate_int(cfg, params, state, s_in)
+
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        u_tmp = saturate(u + i_syn, cfg.u_bits)
+    else:
+        u_tmp = u
+
+    spk = (u_tmp >= params.theta_q).astype(jnp.int32)
+    if cfg.reset == ResetMode.ZERO:
+        u_reset = jnp.zeros_like(u_tmp)
+    else:
+        u_reset = saturate(u_tmp - params.theta_q, cfg.u_bits)
+    u_leak = saturate(coeff_gen.apply_decay(u_tmp, beta_code), cfg.u_bits)
+    u_new = jnp.where(spk == 1, u_reset, u_leak)
+
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        i_new = saturate(coeff_gen.apply_decay(i_syn, cfg.alpha_code()), cfg.i_bits)
+    else:
+        i_new = i_syn
+
+    return LayerState(u=u_new, i_syn=i_new, prev_spk=spk), spk
+
+
+def _integrate_float(cfg: LayerConfig, params: FloatLayerParams, state: LayerState, s_in):
+    acc = jnp.einsum("bi,io->bo", s_in.astype(jnp.float32), params.w_ff)
+    if cfg.topology == Topology.ATA_T:
+        acc = acc + jnp.einsum("bi,io->bo", state.prev_spk, params.w_rec)
+    elif cfg.topology == Topology.ATA_F:
+        acc = acc + state.prev_spk * params.w_rec
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        return state.u, state.i_syn + acc
+    return state.u + acc, state.i_syn
+
+
+def float_layer_step(
+    cfg: LayerConfig,
+    params: FloatLayerParams,
+    state: LayerState,
+    s_in,
+    spike_fn,
+) -> tuple[LayerState, jax.Array]:
+    """Differentiable step with the *same phase ordering* as the hardware.
+
+    ``spike_fn(u - theta)`` must return {0,1} forward with a surrogate
+    gradient (see repro.snn.surrogate).  Keeping the hardware's
+    decay-or-reset ordering at train time removes the train/deploy semantic
+    gap that a vanilla SNN-Torch unrolling would leave.
+    """
+    beta = cfg.effective_beta
+    u, i_syn = _integrate_float(cfg, params, state, s_in)
+    u_tmp = u + i_syn if cfg.neuron == NeuronModel.SYNAPTIC else u
+
+    spk = spike_fn(u_tmp - params.theta)
+    if cfg.reset == ResetMode.ZERO:
+        u_reset = jnp.zeros_like(u_tmp)
+    else:
+        u_reset = u_tmp - params.theta
+    # jax.lax.stop_gradient on the branch selector is implicit: spk already
+    # carries the surrogate gradient; mixing via arithmetic keeps it flowing.
+    u_new = spk * u_reset + (1.0 - spk) * (beta * u_tmp)
+
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        i_new = cfg.alpha * i_syn
+    else:
+        i_new = i_syn
+    return LayerState(u=u_new, i_syn=i_new, prev_spk=spk), spk

@@ -1,0 +1,55 @@
+"""Activation-sharding rules as an ambient context.
+
+Model code annotates activations with *logical* axes
+(``constrain(h, "batch", None, "tp")``); the launcher activates a mesh-aware
+rule table so the same model code runs on a laptop (no constraints), a
+single pod (data/model), or multi-pod (pod/data/model) without edits.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["activation_rules", "constrain", "logical_spec"]
+
+_RULES: ContextVar[dict | None] = ContextVar("sharding_rules", default=None)
+
+
+def _build_table(mesh: Mesh) -> dict:
+    names = mesh.axis_names
+    batch = tuple(n for n in ("pod", "data") if n in names)
+    return {
+        "batch": batch or None,
+        "seq": "data" if "data" in names else None,  # sequence parallelism
+        "tp": "model" if "model" in names else None,
+        "fsdp": "data" if "data" in names else None,
+        None: None,
+    }
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh | None):
+    token = _RULES.set(_build_table(mesh) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def logical_spec(*logical) -> P | None:
+    table = _RULES.get()
+    if table is None:
+        return None
+    return P(*(table.get(a) for a in logical))
+
+
+def constrain(x, *logical):
+    """Apply a sharding constraint if rules are active; no-op otherwise."""
+    spec = logical_spec(*logical)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

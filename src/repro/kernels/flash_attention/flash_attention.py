@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash attention (online softmax, KV streaming).
+
+Grid: (B*H, Sq/bq, Sk/bk) with the KV axis innermost, so each output tile
+revisits across KV steps while the running-softmax state (row max ``m``,
+row sum ``l``, f32 accumulator) lives in VMEM scratch.  HBM traffic is one
+pass over Q/K/V and one write of O -- the [Sq, Sk] score matrix never
+exists, which is what makes the 32k-prefill cells fit.
+
+Supports the masks the assigned architectures need: causal, sliding window
+(gemma2 local layers), and logit soft-capping (gemma2).  The row statistics
+are carried at (bq, 128) width (all lanes equal) to stay on the natively
+tiled VPU layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, causal, window, softcap, bq, bk, nk):
+    kv_step = pl.program_id(2)
+    q_step = pl.program_id(1)
+
+    @pl.when(kv_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, D]
+    k = k_ref[0].astype(jnp.float32)  # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_step * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kv_step * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= q_pos - k_pos >= 0
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 128] (lanes equal)
+    row_max = jnp.max(s, axis=1, keepdims=True)  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(row_max, m_prev.shape))
+    p = jnp.exp(s - m_new[:, :1])  # [bq, bk]
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)  # [bq, 128]
+    l_ref[...] = corr * l_ref[...] + jnp.broadcast_to(
+        jnp.sum(p, axis=1, keepdims=True), l_ref.shape
+    )
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)  # [bk, D]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, :1] + pv
+
+    @pl.when(kv_step == nk - 1)
+    def _epilogue():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q,  # [B, H, Sq, D]
+    k,  # [B, H, Sk, D]
+    v,  # [B, H, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"Sq={Sq}, Sk={Sk} must tile by ({bq}, {bk})")
+    nk = Sk // bk
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap, bq=bq, bk=bk, nk=nk
+    )
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

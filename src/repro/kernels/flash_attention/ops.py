@@ -1,0 +1,38 @@
+"""jit wrapper exposing flash attention in the model's [B, S, H, D] layout,
+with GQA head-group expansion and automatic interpret-mode off TPU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attend(
+    q,  # [B, Sq, Hq, D]
+    k,  # [B, Sk, Hk, D]
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    interpret: bool | None = None,
+):
+    """GQA flash attention in model layout. Returns [B, Sq, Hq, D]."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Sq, Hq, D = q.shape
+    Hk = k.shape[2]
+    rep = Hq // Hk
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    out = flash_attention(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap, interpret=interpret
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Plain materialised attention with optional causal/sliding-window masks and
+gemma2-style logit soft-capping, in f32.  The kernel must match to ~1e-2
+relative (bf16 inputs, f32 accumulation in both paths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(
+    q,  # [B, H, Sq, D]
+    k,  # [B, H, Sk, D]
+    v,  # [B, H, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+):
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qp - kp >= 0
+    if window is not None:
+        ok &= qp - kp < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

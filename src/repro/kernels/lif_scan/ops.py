@@ -1,0 +1,56 @@
+"""Public entry point for the fused LIF scan.
+
+``fused_lif_window`` = integration matmul (spikes x quantized weights, on
+the MXU / XLA) followed by the Pallas membrane scan.  On non-TPU backends
+the Pallas call runs in interpret mode automatically so the same API is
+usable everywhere; the oracle in ref.py is the numerics contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lif_scan.lif_scan import lif_scan
+from repro.kernels.lif_scan.ref import lif_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_lif_window(
+    spikes_in,  # int32/bool [T, B, n_in] input spike raster
+    w_q,  # int32 [n_in, N] quantized weights
+    *,
+    theta_q: int,
+    decay_k: int,
+    u_bits: int = 16,
+    reset_to_zero: bool = False,
+    use_pallas: bool | None = None,
+    block_b: int = 8,
+    block_n: int = 128,
+):
+    """Integration + membrane scan for a full window. Returns (spikes, u)."""
+    currents = jnp.einsum(
+        "tbi,io->tbo", spikes_in.astype(jnp.int32), w_q.astype(jnp.int32)
+    )
+    if use_pallas is None:
+        use_pallas = True
+    if not use_pallas:
+        return lif_scan_ref(currents, theta_q, decay_k, u_bits, reset_to_zero)
+    T, B, N = currents.shape
+    bb = min(block_b, B)
+    bn = min(block_n, N)
+    if B % bb or N % bn:
+        return lif_scan_ref(currents, theta_q, decay_k, u_bits, reset_to_zero)
+    return lif_scan(
+        currents,
+        theta_q=theta_q,
+        decay_k=decay_k,
+        u_bits=u_bits,
+        reset_to_zero=reset_to_zero,
+        block_b=bb,
+        block_n=bn,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the fused LIF/IF time-scan kernel.
+
+Semantics are exactly ``repro.core.snn_layer.int_layer_step`` iterated over a
+window, restricted to the IF/LIF datapath (no recurrence -- the recurrent
+contribution is part of the input current stream by the time it reaches the
+kernel): per step t,
+
+    U   <- sat(U + I[t])                  (integration, u_bits register)
+    spk <- U >= theta
+    U   <- spk ? reset(U) : CG_decay(U)   (decay = gated sum of right shifts)
+
+This file is the correctness contract; the Pallas kernel must match it
+bit-for-bit (tests sweep shapes, decay codes, thresholds, reset modes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import saturate
+
+
+def decay_shift_add(u, k: int):
+    """CG: sum of arithmetic right shifts selected by bits of k (k/256)."""
+    acc = jnp.zeros_like(u)
+    for shift in range(1, 9):
+        if (k >> (8 - shift)) & 1:
+            acc = acc + (u >> shift)
+    return acc
+
+
+def lif_scan_ref(
+    currents,  # int32 [T, B, N] -- weighted input current per step
+    theta_q: int,
+    decay_k: int,  # 0..255, or 256 for bypass (IF)
+    u_bits: int = 16,
+    reset_to_zero: bool = False,
+):
+    """Returns (spikes int32 [T, B, N], final_u int32 [B, N])."""
+    T, B, N = currents.shape
+
+    def step(u, i_t):
+        u = saturate(u + i_t, u_bits)
+        spk = (u >= theta_q).astype(jnp.int32)
+        if reset_to_zero:
+            u_reset = jnp.zeros_like(u)
+        else:
+            u_reset = saturate(u - theta_q, u_bits)
+        if decay_k >= 256:
+            u_leak = u
+        else:
+            u_leak = saturate(decay_shift_add(u, decay_k), u_bits)
+        u = jnp.where(spk == 1, u_reset, u_leak)
+        return u, spk
+
+    u0 = jnp.zeros((B, N), jnp.int32)
+    final_u, spikes = jax.lax.scan(step, u0, currents)
+    return spikes, final_u

@@ -1,0 +1,45 @@
+"""jit wrapper: route ``qdot`` on QTensors through the Pallas kernel.
+
+``enable()`` registers this path with ``repro.core.precision`` so every
+quantized weight matmul in the LM stack (attention projections, MLPs, SSM
+projections) executes through the kernel on TPU; off-TPU it stays on the
+XLA dequant-einsum fallback unless ``force_interpret`` (tests) is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision
+from repro.core.precision import QTensor
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pallas_qdot(x, w: QTensor, *, interpret: bool | None = None):
+    """x [..., K] x QTensor -> [..., N] via the Pallas kernel."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    K = x.shape[-1]
+    N = w.scale.shape[0]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    # Fall back off awkward tilings (tiny smoke shapes).
+    if M % min(128, M) or K % min(512, K) or N % min(128, N) or (w.bits == 4 and N % 256):
+        from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+        return quant_matmul_ref(x, w)
+    out = quant_matmul(x2, w.q, w.scale, bits=w.bits, interpret=interpret)
+    return out.reshape(*lead, N)
+
+
+def enable(*, interpret: bool | None = None) -> None:
+    precision.register_pallas_qdot(lambda x, w: pallas_qdot(x, w, interpret=interpret))
+
+
+def disable() -> None:
+    precision.register_pallas_qdot(None)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: activation-bf16 x weight-int8/int4 matmul.
+
+This is Flexi-NeurA's design-time weight-precision knob realised for the
+MXU (DESIGN.md section 3): weights live in HBM at 1 (int8-class) or 0.5
+(packed int4) bytes per value -- the decode-step memory roofline scales
+accordingly -- and are dequantised tile-by-tile in VMEM.
+
+Tiling: grid (M/bm, N/bn, K/bk); an f32 accumulator tile lives in VMEM
+scratch across the K loop (revisiting semantics: K is the innermost grid
+axis, so the (i, j) output tile sees its K partials in order).  The
+per-output-channel scale is applied once in the epilogue (exact for
+symmetric per-column quantization; see ref.py).
+
+Block shapes default to MXU-aligned (128 x 128) with bk = 512 so the int8
+weight tile (512 x 128 = 64 KiB) and the x tile (128 x 512 bf16 = 128 KiB)
+sit comfortably in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_int8(x_ref, q_ref, scale_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # [bm, bk]
+    w = q_ref[...].astype(jnp.float32)  # [bk, bn]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * scale_ref[...][None, :]).astype(o_ref.dtype)
+
+
+def _kernel_int4(x_ref, q_ref, scale_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # [bm, bk]
+    packed = q_ref[...]  # int8 [bk, bn//2] -- two nibbles per byte
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed.astype(jnp.uint8) >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    w = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], packed.shape[1] * 2)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w.astype(jnp.float32), (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * scale_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def quant_matmul(
+    x,  # [M, K] bf16/f32
+    q,  # int8 [K, N] (bits>=5) or packed int8 [K, N//2] (bits=4)
+    scale,  # f32 [N]
+    *,
+    bits: int = 8,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+):
+    M, K = x.shape
+    N = scale.shape[0]
+    out_dtype = out_dtype or x.dtype
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"({M},{K},{N}) must tile by ({bm},{bk},{bn})")
+    k_steps = K // bk
+    kernel = functools.partial(
+        _kernel_int4 if bits == 4 else _kernel_int8, k_steps=k_steps
+    )
+    q_spec = (
+        pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j))
+        if bits == 4
+        else pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            q_spec,
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the quantized matmul kernel.
+
+Contract: ``y = (x @ q_f32) * scale[None, :]`` computed in f32, cast to the
+activation dtype at the end.  Per-output-channel symmetric scales mean the
+scale factors commute with the contraction, so dequantising after the
+accumulation is exact -- this is what lets the kernel feed raw int weights
+to the MXU and apply scales in the epilogue.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.precision import QTensor, unpack_int4
+
+
+def quant_matmul_ref(x, w: QTensor):
+    """x [..., K] x QTensor([K, N]) -> [..., N] in x.dtype."""
+    q = unpack_int4(w.q) if w.bits == 4 else w.q
+    acc = jnp.einsum(
+        "...k,kn->...n", x.astype(jnp.float32), q.astype(jnp.float32)
+    )
+    return (acc * w.scale[None, :]).astype(x.dtype)

@@ -1,0 +1,43 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run pins the host-device count *before* jax
+initialises; everything else sees the real device count).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one v5e pod (16x16 = 256 chips) or two.
+
+    Axes: ``data`` carries DP + FSDP; ``model`` carries TP/EP; ``pod`` (when
+    present) is pure DP across the DCN.  Requires the process to expose
+    enough devices (the dry-run forces 512 host devices).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are visible; "
+            "run through launch/dryrun.py (it forces XLA_FLAGS host device count)"
+        )
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices[:n]).reshape(shape), axes
+    )
+
+
+def make_host_mesh():
+    """Whatever this host actually has -- smoke tests and examples (1 device)."""
+    devices = jax.devices()
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices).reshape(len(devices), 1), ("data", "model")
+    )

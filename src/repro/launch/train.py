@@ -1,0 +1,55 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --steps 200 --seq-len 256 --batch 8 --run-dir runs/stablelm
+
+On this host the reduced config trains on the host mesh; on a real fleet the
+same entry point takes ``--production-mesh`` (requires 256/512 devices) and
+drives the full config through identical code paths -- the dry-run proves
+those lower and compile.  Resume is automatic from ``<run-dir>/ckpt``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.loop import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--run-dir", default="runs/train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-config", action="store_true", help="full-size model (needs the production mesh)")
+    ap.add_argument("--production-mesh", choices=["single", "multi"], default=None)
+    ap.add_argument("--fail-at", type=int, default=None, help="inject a failure at this step (demo)")
+    args = ap.parse_args()
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.production_mesh == "multi")
+    else:
+        mesh = make_host_mesh()
+
+    loop = TrainLoop(
+        arch_name=args.arch,
+        seq_len=args.seq_len,
+        global_batch=args.batch,
+        mesh=mesh,
+        run_dir=args.run_dir,
+        reduced=not args.full_config,
+        lr=args.lr,
+        ckpt_every=args.ckpt_every,
+        fail_at_step=args.fail_at,
+    )
+    print(json.dumps(loop.run(args.steps), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Grouped-query attention with RoPE / M-RoPE, softcap, sliding windows.
+
+One attention implementation serves every assigned architecture:
+
+* GQA with arbitrary (n_heads, n_kv_heads) -- phi3/nemotron/gemma2/...
+* RoPE (standard) and M-RoPE (qwen2-vl: the rotary half-dims are split into
+  t/h/w sections driven by 3-component position ids)
+* logit soft-capping (gemma2), sliding-window masks (gemma2 local layers)
+* bidirectional mode (whisper encoder) and cross-attention (whisper decoder)
+* one-token decode against a KV cache, including the sequence-sharded
+  long-context path in ``repro.distributed.longctx``.
+
+Shapes follow the [batch, seq, heads, head_dim] convention throughout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import scan as common_scan
+
+__all__ = ["rope", "mrope", "attend", "AttnMask", "decode_attend", "KVCache"]
+
+NEG_INF = -2.3819763e38  # jnp.finfo(f32) min-ish; matches common impls
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [...,] -> (sin, cos) of shape [..., dim/2]."""
+    freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [..., dim/2]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def _apply_rotary(x, sin, cos):
+    """x [..., H, dim]; sin/cos broadcastable to [..., 1, dim/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Standard RoPE. x: [B, S, H, D]; positions: [B, S]."""
+    sin, cos = _rope_angles(positions, x.shape[-1], theta)
+    return _apply_rotary(x, sin[..., None, :], cos[..., None, :])
+
+
+def mrope(x, positions3, theta: float = 10_000.0, sections=(16, 24, 24)):
+    """Multimodal RoPE (qwen2-vl). positions3: [3, B, S] (t, h, w).
+
+    The dim/2 frequency slots are partitioned into ``sections`` (t, h, w);
+    each section rotates by its own position component.
+    """
+    dim = x.shape[-1]
+    if sum(sections) != dim // 2:
+        raise ValueError(f"M-RoPE sections {sections} must sum to dim/2 = {dim // 2}")
+    sin_t, cos_t = _rope_angles(positions3[0], dim, theta)  # [B, S, dim/2]
+    sin_h, cos_h = _rope_angles(positions3[1], dim, theta)
+    sin_w, cos_w = _rope_angles(positions3[2], dim, theta)
+    idx = jnp.zeros((dim // 2,), jnp.int32)
+    idx = idx.at[sections[0] : sections[0] + sections[1]].set(1)
+    idx = idx.at[sections[0] + sections[1] :].set(2)
+    sin = jnp.choose(idx, [sin_t, sin_h, sin_w], mode="clip")
+    cos = jnp.choose(idx, [cos_t, cos_h, cos_w], mode="clip")
+    return _apply_rotary(x, sin[..., None, :], cos[..., None, :])
+
+
+# --------------------------------------------------------------------------
+# Masks
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMask:
+    causal: bool = True
+    window: int | None = None  # sliding window size (gemma2 local layers)
+
+    def build(self, q_pos, k_pos):
+        """q_pos [Sq], k_pos [Sk] -> bool [Sq, Sk] (True = attend)."""
+        d = q_pos[:, None] - k_pos[None, :]
+        ok = jnp.ones(d.shape, bool)
+        if self.causal:
+            ok &= d >= 0
+        if self.window is not None:
+            ok &= d < self.window
+        return ok
+
+
+# --------------------------------------------------------------------------
+# Core attention
+# --------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k, scale):
+    """q [B,Sq,Hq,D], k [B,Sk,Hk,D] -> scores [B,Hk,G,Sq,Sk] (G = Hq/Hk)."""
+    B, Sq, Hq, D = q.shape
+    Hk = k.shape[2]
+    assert Hq % Hk == 0, f"GQA requires n_heads % n_kv == 0 ({Hq} % {Hk})"
+    G = Hq // Hk
+    qg = q.reshape(B, Sq, Hk, G, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+
+
+def _softcap(scores, cap: float | None):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def attend(
+    q,
+    k,
+    v,
+    *,
+    mask: AttnMask = AttnMask(),
+    q_positions=None,
+    k_positions=None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    kv_valid_len=None,
+):
+    """Full (training / prefill) attention. Returns [B, Sq, Hq, D].
+
+    ``kv_valid_len`` masks cache tail entries ([B] int) for decode/prefill
+    against partially filled caches.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    scores = _gqa_scores(q, k, scale)  # [B,Hk,G,Sq,Sk] f32
+    scores = _softcap(scores, softcap)
+
+    q_pos = q_positions if q_positions is not None else jnp.arange(Sq)
+    k_pos = k_positions if k_positions is not None else jnp.arange(Sk)
+    m = mask.build(q_pos, k_pos)  # [Sq, Sk]
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    if kv_valid_len is not None:
+        valid = jnp.arange(Sk)[None] < kv_valid_len[:, None]  # [B, Sk]
+        scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attend_chunked(
+    q,
+    k,
+    v,
+    *,
+    mask: AttnMask = AttnMask(),
+    q_positions=None,
+    k_positions=None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_chunk: int = 1024,
+):
+    """Query-chunked exact attention (flash-style memory footprint).
+
+    Softmax is row-wise over keys, so chunking queries is *exact* -- no
+    online rescaling needed.  Peak live score tensor is
+    [B, Hk, G, q_chunk, Sk] instead of [.., Sq, Sk]; the scan structure also
+    gives XLA a natural remat boundary.  This is the lowering default for
+    long sequences; the Pallas flash kernel (repro.kernels.flash_attention)
+    is the TPU-executable equivalent with K/V tiling as well.
+    """
+    B, Sq, Hq, D = q.shape
+    if Sq % q_chunk:
+        return attend(
+            q, k, v, mask=mask, q_positions=q_positions, k_positions=k_positions,
+            softcap=softcap, scale=scale,
+        )
+    q_pos = q_positions if q_positions is not None else jnp.arange(Sq)
+    k_pos = k_positions if k_positions is not None else jnp.arange(k.shape[1])
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(n, q_chunk)
+
+    def body(_, xs):
+        qc, pc = xs
+        out = attend(
+            qc, k, v, mask=mask, q_positions=pc, k_positions=k_pos,
+            softcap=softcap, scale=scale,
+        )
+        return None, out
+
+    _, outs = common_scan(body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, D)
+
+
+# --------------------------------------------------------------------------
+# KV cache + decode
+# --------------------------------------------------------------------------
+
+
+class KVCache:
+    """Static helpers over a {'k': [B,S,Hk,D], 'v': ..., 'len': [B]} dict."""
+
+    @staticmethod
+    def template(batch: int, max_len: int, n_kv: int, d_head: int, dtype=jnp.bfloat16):
+        return {
+            "k": jax.ShapeDtypeStruct((batch, max_len, n_kv, d_head), dtype),
+            "v": jax.ShapeDtypeStruct((batch, max_len, n_kv, d_head), dtype),
+            "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+
+    @staticmethod
+    def init(batch: int, max_len: int, n_kv: int, d_head: int, dtype=jnp.bfloat16):
+        return {
+            "k": jnp.zeros((batch, max_len, n_kv, d_head), dtype),
+            "v": jnp.zeros((batch, max_len, n_kv, d_head), dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    @staticmethod
+    def append_one(cache, k_new, v_new):
+        """Insert one token's K/V at each sample's current length."""
+        B = k_new.shape[0]
+        idx = cache["len"]  # [B]
+        k = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice_in_dim(c, x, i, axis=0))(
+            cache["k"], k_new, idx
+        )
+        v = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice_in_dim(c, x, i, axis=0))(
+            cache["v"], v_new, idx
+        )
+        return {"k": k, "v": v, "len": idx + 1}
+
+
+def decode_attend(
+    q, cache, *, softcap=None, scale=None, window: int | None = None, kv_inv_scale: float | None = None
+):
+    """One-token decode attention against a (possibly huge) KV cache.
+
+    q: [B, 1, Hq, D]; cache K/V: [B, S, Hk, D] with 'len' valid entries.
+    A sliding window additionally masks entries older than ``window``.
+    ``kv_inv_scale`` dequantizes an int8 cache (the paper's state-precision
+    knob applied to inference state): scores and outputs are linear in K/V,
+    so dequantization folds into a single scalar multiply each.
+    """
+    Sk = cache["k"].shape[1]
+    kv_len = cache["len"]
+    k_pos = jnp.arange(Sk)
+    valid = k_pos[None] < kv_len[:, None]
+    if window is not None:
+        valid &= k_pos[None] >= (kv_len[:, None] - window)
+    D = q.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    scores = _gqa_scores(q, cache["k"], scale)  # [B,Hk,G,1,S]
+    if kv_inv_scale is not None:
+        scores = scores * kv_inv_scale
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cache["v"].astype(jnp.float32))
+    if kv_inv_scale is not None:
+        out = out * kv_inv_scale
+    B, _, Hq, _ = q.shape
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -1,0 +1,202 @@
+"""Parameter templates, norms, and init helpers shared by all architectures.
+
+A *template* is a pytree whose leaves are :class:`ParamSpec` -- (shape, dtype,
+PartitionSpec, init scale) -- from which three aligned pytrees derive:
+
+* ``abstract(template)``   -> jax.ShapeDtypeStruct leaves (dry-run, no alloc)
+* ``materialize(key, t)``  -> real initialised arrays (smoke tests, examples)
+* ``shardings(mesh, t)``   -> NamedSharding leaves (jit in_shardings)
+
+Keeping shape/sharding/init in one place is what keeps the 80-cell dry-run
+and the runnable reduced configs from drifting apart.
+
+Sharding vocabulary (logical -> mesh axes):
+  "fsdp"  -> the data axis (+pod stays replicated; gradients all-reduce over pod)
+  "tp"    -> the model axis (megatron column/row pairs, head/expert sharding)
+Batch dims of activations shard over ("pod","data") when the pod axis exists.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from contextvars import ContextVar
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParamSpec",
+    "dense",
+    "scalar_array",
+    "abstract",
+    "materialize",
+    "shardings",
+    "logical_to_mesh",
+    "rms_norm",
+    "layer_norm",
+    "DTypePolicy",
+]
+
+# Logical axis names used inside templates; resolved against the mesh later.
+FSDP = "fsdp"
+TP = "tp"
+
+# ---------------------------------------------------------------------------
+# Scan indirection: XLA's HLO cost analysis counts a while-loop body ONCE,
+# not x trip-count, so the dry-run's probe compiles must unroll every scan
+# (model depth, attention q-chunks, MoE seq chunks, SSD chunk recurrence,
+# chunked CE).  All model code calls common.scan; the dry-run wraps its
+# probe lowers in `with unroll_scans():`.
+# ---------------------------------------------------------------------------
+
+_UNROLL_SCANS: ContextVar[bool] = ContextVar("unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    token = _UNROLL_SCANS.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS.reset(token)
+
+
+def scan(f, init, xs, **kwargs):
+    """lax.scan that fully unrolls inside an ``unroll_scans()`` context."""
+    if _UNROLL_SCANS.get():
+        kwargs = dict(kwargs, unroll=True)
+    return jax.lax.scan(f, init, xs, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: jnp.dtype = jnp.float32
+    logical: tuple[str | None, ...] = ()
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if self.logical and len(self.logical) != len(self.shape):
+            raise ValueError(f"logical axes {self.logical} do not match shape {self.shape}")
+
+
+def dense(*shape, logical=(), init="normal", scale=None, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, tuple(logical) if logical else (None,) * len(shape), init, scale)
+
+
+def scalar_array(value_init="zeros", dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec((), dtype, (), value_init)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def abstract(template):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), template, is_leaf=_is_spec
+    )
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    # convention: last axis is the output features; everything else is fan-in
+    return int(np.prod(shape[:-1]))
+
+
+def materialize(key, template):
+    leaves, treedef = jax.tree.flatten(template, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(k, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        std = s.scale if s.scale is not None else 1.0 / math.sqrt(max(1, _fan_in(s.shape)))
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [make(k, s) for k, s in zip(keys, leaves)])
+
+
+def logical_to_mesh(mesh: Mesh) -> dict[str, str | tuple[str, ...] | None]:
+    """Map logical axis names onto whatever axes the mesh actually has."""
+    names = mesh.axis_names
+    table: dict[str, str | tuple[str, ...] | None] = {
+        FSDP: "data" if "data" in names else None,
+        TP: "model" if "model" in names else None,
+        "batch": tuple(n for n in ("pod", "data") if n in names) or None,
+    }
+    return table
+
+
+def partition_spec(spec: ParamSpec, table, mesh: Mesh | None = None) -> P:
+    """Resolve logical axes to mesh axes, dropping any assignment whose
+    dimension is not divisible by the mesh axis (explicit in_shardings must
+    divide exactly; e.g. qwen2-moe's 60 experts over a 16-way model axis
+    fall back to replication on that dim, visible as a roofline penalty)."""
+    axes = []
+    logical = spec.logical or (None,) * len(spec.shape)
+    for dim, a in zip(spec.shape, logical):
+        name = table.get(a) if a else None
+        if name is not None and mesh is not None:
+            names = name if isinstance(name, tuple) else (name,)
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            if dim % size:
+                name = None
+        axes.append(name)
+    return P(*axes)
+
+
+def shardings(mesh: Mesh, template):
+    table = logical_to_mesh(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, partition_spec(s, table, mesh)), template, is_leaf=_is_spec
+    )
+
+
+def partition_specs(mesh: Mesh, template):
+    table = logical_to_mesh(mesh)
+    return jax.tree.map(lambda s: partition_spec(s, table, mesh), template, is_leaf=_is_spec)
+
+
+# --------------------------------------------------------------------------
+# Norms and dtype policy
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    params: jnp.dtype = jnp.float32
+    compute: jnp.dtype = jnp.bfloat16
+
+    def cast_in(self, x):
+        return x.astype(self.compute)
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, plus_one: bool = False):
+    """RMSNorm in f32 (numerics match the reference implementations)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:  # gemma convention: weight stored as (gamma - 1)
+        w = w + 1.0
+    return (normed * w).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)

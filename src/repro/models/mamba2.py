@@ -1,0 +1,234 @@
+"""Mamba-2 (SSD, state-space duality) mixer: chunked train path + O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060: within a chunk the output
+is a masked quadratic form (attention-like, MXU-friendly); across chunks a
+linear recurrence carries the [H, P, N] state.  The per-step decay
+``a = exp(dt * A)`` is exactly the paper's (Flexi-NeurA's) leaky-integrator
+coefficient generalised: the DSE can quantize it onto the CG's k/256 grid
+(``decay_quant_bits``), which is the SSM-side realisation of the paper's
+leak-precision knob (DESIGN.md section 4).
+
+Shapes: x [B, L, H, P]; B, C [B, L, G, N]; dt [B, L, H]; states [B, H, P, N].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import qdot
+from repro.distributed.sharding import constrain
+from repro.models.common import FSDP, TP, dense, rms_norm
+from repro.models.common import scan as common_scan
+
+__all__ = ["SSMConfig", "ssm_template", "ssm_apply", "ssm_decode_step", "ssm_cache_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    decay_quant_bits: int | None = None  # CG-grid quantization of exp(dt*A)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_template(cfg: SSMConfig) -> dict:
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": dense(cfg.d_model, d_in_proj, logical=(FSDP, TP)),
+        "conv_w": dense(cfg.d_conv, cfg.conv_dim, logical=(None, TP), scale=0.5),
+        "conv_b": dense(cfg.conv_dim, logical=(TP,), init="zeros"),
+        "a_log": dense(cfg.n_heads, logical=(TP,), init="ones"),
+        "d_skip": dense(cfg.n_heads, logical=(TP,), init="ones"),
+        "dt_bias": dense(cfg.n_heads, logical=(TP,), init="zeros"),
+        "norm_w": dense(cfg.d_inner, logical=(TP,), init="ones"),
+        "out_proj": dense(cfg.d_inner, cfg.d_model, logical=(TP, FSDP)),
+    }
+
+
+def _split_in_proj(cfg: SSMConfig, zxbcdt):
+    d_in, g_n = cfg.d_inner, cfg.n_groups * cfg.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + cfg.conv_dim]
+    dt = zxbcdt[..., d_in + cfg.conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: SSMConfig, xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xbc [B, L, conv_dim].
+
+    With ``conv_state`` ([B, d_conv-1, conv_dim]) performs streaming update
+    (decode); returns (out, new_state)."""
+    K = cfg.d_conv
+    if conv_state is not None:
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # [B, K-1+L, C]
+        new_state = window[:, -(K - 1) :, :]
+    else:
+        window = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = window[:, -(K - 1) :, :]
+    out = sum(window[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out + conv_b[None, None, :]), new_state
+
+
+def _decays(cfg: SSMConfig, dt_raw, dt_bias, a_log):
+    """dt (softplus) and per-step decay a = exp(dt * A), A = -exp(a_log).
+
+    With ``decay_quant_bits`` the decay is snapped to the Coefficient
+    Generator grid (k/2^bits) with a straight-through gradient -- the
+    paper's leak-precision knob applied to the SSD recurrence."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias[None, None, :])
+    a = jnp.exp(dt * -jnp.exp(a_log.astype(jnp.float32))[None, None, :])
+    if cfg.decay_quant_bits is not None:
+        levels = float(1 << cfg.decay_quant_bits)
+        a_q = jnp.round(a * levels) / levels
+        a = a + jax.lax.stop_gradient(a_q - a)
+    return dt, a
+
+
+def _segsum(log_a):
+    """log_a [..., T] -> cumulative-decay matrix M[i, j] = sum_{k=j+1..i} log_a_k
+    (lower-triangular; -inf above the diagonal)."""
+    T = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    M = cs[..., :, None] - cs[..., None, :]
+    ii, jj = jnp.mgrid[0:T, 0:T]
+    return jnp.where(ii[None] >= jj[None], M, -jnp.inf)
+
+
+def ssd_scan(cfg: SSMConfig, x, dt, a, B, C, init_state=None):
+    """Chunked SSD. Returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    Bb, L, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    ch = min(cfg.chunk, L)
+    assert L % ch == 0, f"seq {L} not divisible by chunk {ch}"
+    nc = L // ch
+    rep = H // G  # heads per B/C group
+
+    xc = x.reshape(Bb, nc, ch, H, Pd)
+    dtc = dt.reshape(Bb, nc, ch, H)
+    ac = a.reshape(Bb, nc, ch, H)
+    Bc = B.reshape(Bb, nc, ch, G, N)
+    Cc = C.reshape(Bb, nc, ch, G, N)
+    log_a = jnp.log(jnp.maximum(ac, 1e-20))  # [B,nc,ch,H]
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    Lmat = jnp.exp(_segsum(log_a.transpose(0, 1, 3, 2)))  # [B,nc,H,ch,ch]
+    CB = jnp.einsum("bcigN,bcjgN->bcgij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    CB = jnp.repeat(CB, rep, axis=2)  # [B,nc,H,i,j]
+    scores = CB * Lmat
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # ---- chunk states: state_c = sum_j decay(j..end) B_j (dt x)_j ----
+    decay_to_end = jnp.exp(jnp.cumsum(log_a, axis=2)[:, :, -1:, :] - jnp.cumsum(log_a, axis=2))
+    Brep = jnp.repeat(Bc, rep, axis=3)  # [B,nc,ch,H,N]
+    chunk_state = jnp.einsum(
+        "bcjhn,bcjhp->bchpn", Brep.astype(jnp.float32) * decay_to_end[..., None], xdt
+    )  # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence over nc (sequential scan; nc is small) ----
+    chunk_decay = jnp.exp(jnp.sum(log_a, axis=2))  # [B,nc,H]
+
+    def body(h, inputs):
+        s, d = inputs  # s [B,H,P,N], d [B,H]
+        h_new = h * d[:, :, None, None] + s
+        return h_new, h  # emit state *entering* the chunk
+
+    init = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    )
+    final_state, h_in = common_scan(
+        body,
+        init,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # ---- inter-chunk contribution: C_i · (decay(0..i) * h_in) ----
+    decay_from_start = jnp.exp(jnp.cumsum(log_a, axis=2))
+    Crep = jnp.repeat(Cc, rep, axis=3)  # [B,nc,ch,H,N]
+    y_inter = jnp.einsum(
+        "bcihn,bchpn->bcihp", Crep.astype(jnp.float32) * decay_from_start[..., None], h_in
+    )
+    y = (y_intra + y_inter).reshape(Bb, L, H, Pd)
+    return y, final_state
+
+
+def ssm_apply(cfg: SSMConfig, params, x_tokens, init_state=None):
+    """Full mixer: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    x_tokens [B, L, D] -> (y [B, L, D], final_state, conv_state)."""
+    B_, L, D = x_tokens.shape
+    zxbcdt = qdot(x_tokens, params["in_proj"])
+    z, xbc, dt_raw = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(cfg, xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., : cfg.d_inner].reshape(B_, L, cfg.n_heads, cfg.head_dim)
+    x = constrain(x, "batch", None, "tp", None)  # heads sharded like attention
+    gN = cfg.n_groups * cfg.d_state
+    Bmat = xbc[..., cfg.d_inner : cfg.d_inner + gN].reshape(B_, L, cfg.n_groups, cfg.d_state)
+    Cmat = xbc[..., cfg.d_inner + gN :].reshape(B_, L, cfg.n_groups, cfg.d_state)
+    dt, a = _decays(cfg, dt_raw, params["dt_bias"], params["a_log"])
+
+    y, state = ssd_scan(cfg, x, dt, a, Bmat, Cmat, init_state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, L, cfg.d_inner).astype(x_tokens.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    return qdot(y, params["out_proj"]), state, conv_state
+
+
+def ssm_cache_init(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype),
+    }
+
+
+def ssm_cache_template(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "state": jax.ShapeDtypeStruct((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype),
+    }
+
+
+def ssm_decode_step(cfg: SSMConfig, params, cache, x_token):
+    """One-token decode: O(1) in context length. x_token [B, 1, D]."""
+    B_ = x_token.shape[0]
+    zxbcdt = qdot(x_token, params["in_proj"])
+    z, xbc, dt_raw = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(cfg, xbc, params["conv_w"], params["conv_b"], cache["conv"])
+    x = xbc[..., : cfg.d_inner].reshape(B_, cfg.n_heads, cfg.head_dim)
+    gN = cfg.n_groups * cfg.d_state
+    Bmat = xbc[:, 0, cfg.d_inner : cfg.d_inner + gN].reshape(B_, cfg.n_groups, cfg.d_state)
+    Cmat = xbc[:, 0, cfg.d_inner + gN :].reshape(B_, cfg.n_groups, cfg.d_state)
+    dt, a = _decays(cfg, dt_raw, params["dt_bias"], params["a_log"])  # [B,1,H]
+
+    rep = cfg.n_heads // cfg.n_groups
+    Brep = jnp.repeat(Bmat, rep, axis=1)  # [B,H,N]
+    Crep = jnp.repeat(Cmat, rep, axis=1)
+    xdt = x.astype(jnp.float32) * dt[:, 0, :, None]  # [B,H,P]
+    state = cache["state"] * a[:, 0, :, None, None] + jnp.einsum("bhn,bhp->bhpn", Brep.astype(jnp.float32), xdt)
+    y = jnp.einsum("bhn,bhpn->bhp", Crep.astype(jnp.float32), state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, 1, cfg.d_inner).astype(x_token.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    return qdot(y, params["out_proj"]), {"conv": conv_state, "state": state}

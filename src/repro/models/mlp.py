@@ -1,0 +1,170 @@
+"""Feed-forward blocks: SwiGLU / squared-ReLU / GELU MLPs and capacity-based MoE.
+
+The MoE uses the classic dispatch/combine einsum formulation (Mesh-TF /
+GShard lineage): chunked over the sequence so the one-hot dispatch tensor
+stays bounded, experts sharded over the ``tp`` axis (expert parallelism --
+GSPMD lowers the dispatch einsums to all-to-alls across the expert axis).
+Top-k routing with per-(batch-row, chunk) capacity and the standard
+load-balancing auxiliary loss.
+
+The paper connection (DESIGN.md section 4): top-k routing *is* event-driven
+computation -- only the experts a token "spikes" at do work -- so the MoE
+path shares the framework's event-dispatch vocabulary, and per-expert weight
+precision is a first-class Flex-plorer knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import qdot
+from repro.models.common import FSDP, TP, dense
+from repro.models.common import scan as common_scan
+
+__all__ = ["MLPConfig", "MoEConfig", "mlp_template", "mlp_apply", "moe_template", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"  # swiglu | sqrelu | gelu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # always-on experts (qwen2-moe)
+    capacity_factor: float = 1.25
+    seq_chunk: int = 512
+    router_aux_weight: float = 0.01
+    # which mesh axis carries expert parallelism: "tp" (model axis, the
+    # baseline) or "fsdp" (data axis -- dispatch all-to-alls stay within the
+    # batch-sharding group; a section-Perf variant)
+    shard_experts: str = "tp"
+
+
+def mlp_template(cfg: MLPConfig) -> dict:
+    t = {}
+    if cfg.act == "swiglu":
+        t["w_gate"] = dense(cfg.d_model, cfg.d_ff, logical=(FSDP, TP))
+        t["w_up"] = dense(cfg.d_model, cfg.d_ff, logical=(FSDP, TP))
+    else:
+        t["w_up"] = dense(cfg.d_model, cfg.d_ff, logical=(FSDP, TP))
+    t["w_down"] = dense(cfg.d_ff, cfg.d_model, logical=(TP, FSDP))
+    return t
+
+
+def mlp_apply(cfg: MLPConfig, params, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(qdot(x, params["w_gate"])) * qdot(x, params["w_up"])
+    elif cfg.act == "sqrelu":
+        h = jnp.square(jax.nn.relu(qdot(x, params["w_up"])))
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(qdot(x, params["w_up"]), approximate=True)
+    else:
+        raise ValueError(cfg.act)
+    return qdot(h, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts
+# --------------------------------------------------------------------------
+
+
+def moe_template(cfg: MoEConfig) -> dict:
+    if cfg.shard_experts == "megatron":
+        # experts replicated; each expert's FFN dim is TP-sharded, so dispatch
+        # and the expert matmuls are local and the block pays exactly one
+        # activation all-reduce (like a dense Megatron MLP).
+        gate_ax, down_ax = (None, None, TP), (None, TP, None)
+    else:
+        e_ax = TP if cfg.shard_experts == "tp" else FSDP
+        ff_ax = FSDP if cfg.shard_experts == "tp" else TP
+        gate_ax, down_ax = (e_ax, ff_ax, None), (e_ax, None, ff_ax)
+    t = {
+        "router": dense(cfg.d_model, cfg.n_experts, logical=(FSDP, None), scale=0.02),
+        "w_gate": dense(cfg.n_experts, cfg.d_model, cfg.d_ff_expert, logical=gate_ax),
+        "w_up": dense(cfg.n_experts, cfg.d_model, cfg.d_ff_expert, logical=gate_ax),
+        "w_down": dense(cfg.n_experts, cfg.d_ff_expert, cfg.d_model, logical=down_ax),
+    }
+    if cfg.n_shared:
+        shared = MLPConfig(cfg.d_model, cfg.d_ff_expert * cfg.n_shared, "swiglu")
+        t["shared"] = mlp_template(shared)
+    return t
+
+
+def _capacity(cfg: MoEConfig, chunk: int) -> int:
+    return max(1, math.ceil(chunk * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+
+
+def _route(cfg: MoEConfig, router_logits):
+    """Top-k routing. logits [B,C,E] -> (weights [B,C,E], aux_loss)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)  # [B,C,k]
+    top_vals = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-9)
+    onehot = jax.nn.one_hot(top_idx, cfg.n_experts, dtype=probs.dtype)  # [B,C,k,E]
+    gate_full = jnp.einsum("bck,bcke->bce", top_vals, onehot)
+    # Load-balance loss (Switch-style): mean prob * mean assignment per expert.
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gate_full, aux
+
+
+def _moe_chunk(cfg: MoEConfig, params, x_chunk):
+    """x_chunk [B, C, D] -> (out [B, C, D], aux)."""
+    B, C, D = x_chunk.shape
+    cap = _capacity(cfg, C)
+    logits = jnp.einsum("bcd,de->bce", x_chunk.astype(jnp.float32), params["router"].astype(jnp.float32))
+    gates, aux = _route(cfg, logits)  # [B,C,E]
+
+    # Position of each token within its expert's capacity buffer.
+    assign = (gates > 0).astype(jnp.float32)  # [B,C,E]
+    pos = jnp.cumsum(assign, axis=1) * assign - 1.0  # [B,C,E]; -1 = unassigned
+    keep = (pos >= 0) & (pos < cap)
+    pos = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+    # dispatch[b,c,e,cap]: one-hot over capacity slot
+    disp = jax.nn.one_hot(pos, cap, dtype=x_chunk.dtype) * keep[..., None].astype(x_chunk.dtype)
+    combine = disp * gates[..., None].astype(x_chunk.dtype)
+
+    dt = x_chunk.dtype
+    expert_in = jnp.einsum("bcek,bcd->ebkd", disp, x_chunk)  # [E,B,cap,D]
+    h = jax.nn.silu(
+        jnp.einsum("ebkd,edf->ebkf", expert_in, params["w_gate"].astype(dt))
+    ) * jnp.einsum("ebkd,edf->ebkf", expert_in, params["w_up"].astype(dt))
+    expert_out = jnp.einsum("ebkf,efd->ebkd", h, params["w_down"].astype(dt))
+    out = jnp.einsum("bcek,ebkd->bcd", combine, expert_out)
+    return out, aux
+
+
+def moe_apply(cfg: MoEConfig, params, x):
+    """x [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    chunk = min(cfg.seq_chunk, S)
+    if S % chunk:
+        # pad to a chunk multiple; padded tokens route but are discarded.
+        pad = chunk - S % chunk
+        x_p = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    else:
+        pad, x_p = 0, x
+    n_chunks = x_p.shape[1] // chunk
+    xs = x_p.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)  # [N,B,chunk,D]
+
+    def body(carry, xc):
+        out, aux = _moe_chunk(cfg, params, xc)
+        return carry + aux, out
+
+    aux_total, outs = common_scan(body, jnp.zeros((), jnp.float32), xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, D)[:, :S]
+    if cfg.n_shared:
+        shared = MLPConfig(cfg.d_model, cfg.d_ff_expert * cfg.n_shared, "swiglu")
+        out = out + mlp_apply(shared, params["shared"], x)
+    return out, cfg.router_aux_weight * aux_total / max(1, n_chunks)

@@ -1,0 +1,255 @@
+"""Architecture registry: one uniform handle per assigned architecture.
+
+An :class:`Arch` bundles a model config with everything the launchers need:
+abstract parameter/input templates (dry-run), shardings, real init (smoke
+tests / examples), loss / prefill / decode functions, and a ``reduced()``
+variant for CPU smoke tests.  Configs register themselves on import via
+``repro.configs`` (one module per architecture).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common, transformer as tfm, whisper as whs
+from repro.models.transformer import ModelConfig
+from repro.models.whisper import WhisperConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "Arch", "register", "get_arch", "list_archs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, "Arch"] = {}
+
+
+def _batch_axes(mesh, global_batch: int | None = None) -> Any:
+    """Batch sharding axes; falls back to replication when batch is too small
+    to divide them (e.g. long_500k's global_batch=1)."""
+    names = mesh.axis_names
+    axes = tuple(n for n in ("pod", "data") if n in names)
+    if not axes:
+        return None
+    if global_batch is not None:
+        import numpy as _np
+
+        size = int(_np.prod([mesh.shape[a] for a in axes]))
+        if global_batch % size:
+            # try the smaller prefix ("pod" alone), else replicate
+            for sub in (axes[:1], None):
+                if sub is None:
+                    return None
+                sub_size = int(_np.prod([mesh.shape[a] for a in sub]))
+                if global_batch % sub_size == 0 and global_batch >= sub_size:
+                    return sub
+    return axes
+
+
+@dataclasses.dataclass
+class Arch:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    config: Any  # ModelConfig | WhisperConfig
+    reduced_config: Any
+    skip_shapes: tuple[str, ...] = ()  # e.g. long_500k for pure full-attention
+    skip_reason: str = ""
+    n_vision_tokens: int = 0  # vlm frontend stub width
+
+    # -- parameters ------------------------------------------------------
+    def template(self, cfg=None):
+        cfg = cfg or self.config
+        if isinstance(cfg, WhisperConfig):
+            return whs.whisper_template(cfg)
+        return tfm.model_template(cfg)
+
+    def abstract_params(self, cfg=None):
+        return common.abstract(self.template(cfg))
+
+    def init_params(self, key, cfg=None):
+        return common.materialize(key, self.template(cfg))
+
+    def param_shardings(self, mesh, cfg=None):
+        return common.shardings(mesh, self.template(cfg))
+
+    def param_pspecs(self, mesh, cfg=None):
+        return common.partition_specs(mesh, self.template(cfg))
+
+    # -- step functions ----------------------------------------------------
+    def loss_fn(self, cfg=None) -> Callable:
+        cfg = cfg or self.config
+        if isinstance(cfg, WhisperConfig):
+            return lambda params, batch: whs.whisper_loss(cfg, params, batch)
+        return lambda params, batch: tfm.lm_loss(cfg, params, batch)
+
+    def prefill_fn(self, cfg=None) -> Callable:
+        cfg = cfg or self.config
+        if isinstance(cfg, WhisperConfig):
+            return lambda params, batch: whs.whisper_prefill(cfg, params, batch["audio_frames"])
+        return lambda params, batch: tfm.prefill(
+            cfg,
+            params,
+            batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            pos3=batch.get("positions3"),
+        )
+
+    def decode_fn(self, cfg=None) -> Callable:
+        cfg = cfg or self.config
+        if isinstance(cfg, WhisperConfig):
+            return lambda params, caches, batch: whs.whisper_decode_step(
+                cfg, params, caches, batch["tokens"], batch["cur_len"]
+            )
+        return lambda params, caches, batch: tfm.decode_step(
+            cfg, params, caches, batch["tokens"], batch["cur_len"]
+        )
+
+    # -- inputs ------------------------------------------------------------
+    def input_template(self, shape: ShapeSpec, cfg=None) -> dict:
+        """ShapeDtypeStructs for every model input of this (arch x shape) cell.
+
+        Modality frontends are stubs: VLM gets precomputed patch embeddings,
+        Whisper gets precomputed mel-frame embeddings (DESIGN.md section 4).
+        """
+        cfg = cfg or self.config
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if isinstance(cfg, WhisperConfig):
+            dec = min(cfg.dec_max_len, S)
+            if shape.kind == "train":
+                return {
+                    "audio_frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, dec), i32),
+                    "targets": jax.ShapeDtypeStruct((B, dec), i32),
+                }
+            if shape.kind == "prefill":
+                return {"audio_frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "cur_len": jax.ShapeDtypeStruct((B,), i32),
+            }
+        t: dict = {}
+        if shape.kind in ("train", "prefill"):
+            n_vis = min(self.n_vision_tokens, S // 2) if self.family == "vlm" else 0
+            t["tokens"] = jax.ShapeDtypeStruct((B, S - n_vis), i32)
+            if shape.kind == "train":
+                t["targets"] = jax.ShapeDtypeStruct((B, S - n_vis), i32)
+            if n_vis:
+                t["vision_embeds"] = jax.ShapeDtypeStruct((B, n_vis, cfg.d_model), jnp.bfloat16)
+                t["positions3"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        else:
+            t["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+            t["cur_len"] = jax.ShapeDtypeStruct((B,), i32)
+        return t
+
+    def input_pspecs(self, mesh, shape: ShapeSpec, cfg=None) -> dict:
+        b = _batch_axes(mesh, shape.global_batch)
+        cfg = cfg or self.config
+        specs = {}
+        for k, v in self.input_template(shape, cfg).items():
+            if k == "positions3":
+                specs[k] = P(None, b, None)
+            elif v.ndim == 1:
+                specs[k] = P(b)
+            elif v.ndim == 2:
+                specs[k] = P(b, None)
+            else:
+                specs[k] = P(b, None, None)
+        return specs
+
+    def input_concrete(self, key, shape: ShapeSpec, cfg=None) -> dict:
+        """Random realised inputs (smoke tests at reduced scale)."""
+        cfg = cfg or self.config
+        out = {}
+        for k, s in self.input_template(shape, cfg).items():
+            if s.dtype == jnp.int32:
+                if k == "cur_len":
+                    out[k] = jnp.full(s.shape, shape.seq_len // 2, jnp.int32)
+                else:
+                    vocab = cfg.vocab
+                    key, sub = jax.random.split(key)
+                    out[k] = jax.random.randint(sub, s.shape, 0, vocab, jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                out[k] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+        return out
+
+    # -- caches --------------------------------------------------------
+    def cache_abstract(self, shape: ShapeSpec, cfg=None):
+        cfg = cfg or self.config
+        B, S = shape.global_batch, shape.seq_len
+        if isinstance(cfg, WhisperConfig):
+            return whs.whisper_cache_template(cfg, B, S)
+        return tfm.cache_template(cfg, B, S)
+
+    def cache_pspecs(self, mesh, shape: ShapeSpec, cfg=None, shard_seq: bool = False):
+        cfg = cfg or self.config
+        b = _batch_axes(mesh, shape.global_batch)
+        tp = "model" if "model" in mesh.axis_names else None
+        seq = ("data" if shard_seq and "data" in mesh.axis_names else None)
+        if tp is not None:
+            # explicit in_shardings must divide exactly (unlike constraints)
+            n_kv = cfg.n_heads if isinstance(cfg, WhisperConfig) else cfg.n_kv_heads
+            if n_kv % mesh.shape["model"]:
+                tp = None
+        if isinstance(cfg, WhisperConfig):
+            kv = lambda: {"k": P(None, b, seq, tp, None), "v": P(None, b, seq, tp, None), "len": P(None, b)}
+            return {"self": {"k": P(None, b, None, tp, None), "v": P(None, b, None, tp, None), "len": P(None, b)}, "cross": kv()}
+        return tfm.cache_specs(cfg, b, tp, seq)
+
+    def runs_shape(self, shape_name: str) -> bool:
+        return shape_name not in self.skip_shapes
+
+
+def register(arch: Arch) -> Arch:
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> Arch:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    import importlib
+
+    for mod in (
+        "jamba_v01_52b",
+        "phi3_medium_14b",
+        "nemotron_4_15b",
+        "stablelm_1_6b",
+        "gemma2_27b",
+        "qwen2_vl_2b",
+        "granite_moe_1b",
+        "qwen2_moe_a2_7b",
+        "mamba2_780m",
+        "whisper_medium",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")

@@ -1,0 +1,495 @@
+"""The unified decoder LM covering dense / MoE / hybrid / SSM / VLM families.
+
+A model is a repeating *pattern* of blocks (e.g. jamba: 1 attention + 7 mamba
+per period, MoE on every 2nd layer; gemma2: alternating local/global
+attention).  Parameters for each pattern position are stacked over the
+repeat-group axis and the forward pass is a ``lax.scan`` over groups, so HLO
+size -- and dry-run compile time -- is independent of depth.
+
+Three execution modes share one block implementation:
+  * train    -- full-sequence, no cache, returns loss-ready logits
+  * prefill  -- full-sequence, emits KV/SSM caches
+  * decode   -- one token against caches (the ``serve_step`` the decode_*
+                and long_* dry-run shapes lower)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import qdot
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models.attention import AttnMask, KVCache
+from repro.models.common import FSDP, TP, dense, rms_norm
+from repro.models.common import scan as common_scan
+from repro.models.mamba2 import (
+    SSMConfig,
+    ssm_apply,
+    ssm_cache_init,
+    ssm_cache_template,
+    ssm_decode_step,
+    ssm_template,
+)
+from repro.models.mlp import MLPConfig, MoEConfig, mlp_apply, mlp_template, moe_apply, moe_template
+
+__all__ = ["ModelConfig", "BlockKind", "layer_pattern", "model_template", "forward", "lm_loss", "prefill", "decode_step", "cache_template", "cache_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"
+    rope_theta: float = 10_000.0
+    rope_frac: float = 1.0  # stablelm applies rotary to 25% of head dims
+    mrope: bool = False
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    window: int | None = None  # sliding-window size for "local" layers
+    local_global_period: int = 0  # gemma2: 2 -> alternate local/global
+    attn_softcap: float | None = None
+    logit_softcap: float | None = None
+    sandwich_norm: bool = False  # gemma2 post-norms
+    embed_scale: bool = False  # gemma2 multiplies embeddings by sqrt(d)
+    tie_embeddings: bool = True
+    qkv_bias: bool = False  # qwen2 family
+    moe: MoEConfig | None = None
+    moe_period: int = 1  # every k-th layer uses MoE (1 = all, if moe set)
+    ssm: SSMConfig | None = None
+    attn_period: int = 0  # hybrid: 0 = all-attention; k = attn every k-th; -1 = none
+    remat: str = "none"  # none | block
+    compute_dtype: Any = jnp.bfloat16
+    # FSDP-shard the d_model axis of embed/lm_head. True is the FSDP default;
+    # False replicates that axis so the CE head matmul contracts locally
+    # (no per-chunk cross-data all-reduce) -- a section-Perf variant.
+    shard_head_dim: bool = True
+    # int8 KV cache (None = compute_dtype). The paper's membrane/state
+    # precision knob applied to inference state: halves cache HBM traffic
+    # and capacity. kv_scale maps values onto the int8 grid symmetrically.
+    kv_cache_bits: int | None = None
+    kv_scale: float = 32.0
+    # Flatten GQA before attention (repeat KV to n_heads). When n_kv_heads
+    # does not divide the model axis, grouped scores [B, Hk, G, Sq, Sk]
+    # cannot stay sharded and GSPMD all-gathers multi-GB f32 score tensors;
+    # with Hq divisible the flat layout keeps them local (section Perf).
+    gqa_flat: bool = False
+
+    @property
+    def attention_free(self) -> bool:
+        return self.attn_period == -1
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockKind:
+    mixer: str  # "attn" | "ssm"
+    window: int | None
+    moe: bool
+
+
+def layer_pattern(cfg: ModelConfig) -> tuple[BlockKind, ...]:
+    """The repeating block pattern; len divides n_layers."""
+    period = 1
+    if cfg.attn_period > 0:
+        period = max(period, cfg.attn_period)
+    if cfg.local_global_period:
+        period = max(period, cfg.local_global_period)
+    if cfg.moe is not None and cfg.moe_period > 1:
+        import math
+
+        period = math.lcm(period, cfg.moe_period)
+    kinds = []
+    for i in range(period):
+        if cfg.attention_free:
+            mixer = "ssm"
+        elif cfg.attn_period > 0:
+            mixer = "attn" if i % cfg.attn_period == 0 else "ssm"
+        else:
+            mixer = "attn"
+        window = None
+        if cfg.local_global_period and i % cfg.local_global_period == 0:
+            window = cfg.window  # even positions local (gemma2 ordering)
+        moe = cfg.moe is not None and (i % cfg.moe_period == 0 if cfg.moe_period > 1 else True)
+        kinds.append(BlockKind(mixer=mixer, window=window, moe=moe))
+    if cfg.n_layers % period:
+        raise ValueError(f"{cfg.name}: n_layers {cfg.n_layers} not divisible by pattern {period}")
+    return tuple(kinds)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(layer_pattern(cfg))
+
+
+# --------------------------------------------------------------------------
+# Templates
+# --------------------------------------------------------------------------
+
+
+def _attn_template(cfg: ModelConfig) -> dict:
+    qdim = cfg.n_heads * cfg.d_head
+    kvdim = cfg.n_kv_heads * cfg.d_head
+    t = {
+        "wq": dense(cfg.d_model, qdim, logical=(FSDP, TP)),
+        "wk": dense(cfg.d_model, kvdim, logical=(FSDP, TP)),
+        "wv": dense(cfg.d_model, kvdim, logical=(FSDP, TP)),
+        "wo": dense(qdim, cfg.d_model, logical=(TP, FSDP)),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = dense(qdim, logical=(TP,), init="zeros")
+        t["bk"] = dense(kvdim, logical=(TP,), init="zeros")
+        t["bv"] = dense(kvdim, logical=(TP,), init="zeros")
+    return t
+
+
+def _block_template(cfg: ModelConfig, kind: BlockKind) -> dict:
+    t: dict = {"norm1": dense(cfg.d_model, init="ones")}
+    if kind.mixer == "attn":
+        t["attn"] = _attn_template(cfg)
+    else:
+        t["ssm"] = ssm_template(cfg.ssm)
+    has_ff = kind.moe or cfg.d_ff > 0
+    if has_ff:
+        t["norm2"] = dense(cfg.d_model, init="ones")
+        if kind.moe:
+            t["moe"] = moe_template(cfg.moe)
+        else:
+            t["mlp"] = mlp_template(MLPConfig(cfg.d_model, cfg.d_ff, cfg.act))
+    if cfg.sandwich_norm:
+        t["post_norm1"] = dense(cfg.d_model, init="ones")
+        if has_ff:
+            t["post_norm2"] = dense(cfg.d_model, init="ones")
+    return t
+
+
+def _stack(template, n: int):
+    """Prepend the scan (repeat-group) axis to every leaf spec."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n, *s.shape), logical=(None, *(s.logical or (None,) * len(s.shape)))
+        ),
+        template,
+        is_leaf=lambda x: hasattr(x, "logical"),
+    )
+
+
+def model_template(cfg: ModelConfig) -> dict:
+    pattern = layer_pattern(cfg)
+    ng = n_groups(cfg)
+    d_axis = FSDP if cfg.shard_head_dim else None
+    t: dict = {
+        "embed": dense(cfg.vocab, cfg.d_model, logical=(TP, d_axis), scale=0.02),
+        "final_norm": dense(cfg.d_model, init="ones"),
+        "blocks": {f"pos{i}": _stack(_block_template(cfg, k), ng) for i, k in enumerate(pattern)},
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = dense(cfg.d_model, cfg.vocab, logical=(d_axis, TP), scale=0.02)
+    return t
+
+
+# --------------------------------------------------------------------------
+# Block application
+# --------------------------------------------------------------------------
+
+
+def _attn_apply(cfg, kind, p, x, positions, pos3, mode, cache):
+    B, S, D = x.shape
+    q = qdot(x, p["wq"])
+    k = qdot(x, p["wk"])
+    v = qdot(x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.gqa_flat and cfg.n_kv_heads < cfg.n_heads and mode != "decode":
+        rep = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, "batch", None, "tp", None)
+    k = constrain(k, "batch", None, "tp", None)
+
+    rot = int(cfg.d_head * cfg.rope_frac)
+
+    def apply_rope(t, pos):
+        if rot == t.shape[-1]:
+            if cfg.mrope:
+                return attn_lib.mrope(t, pos3, cfg.rope_theta, cfg.mrope_sections)
+            return attn_lib.rope(t, pos, cfg.rope_theta)
+        t_rot, t_pass = t[..., :rot], t[..., rot:]
+        t_rot = attn_lib.rope(t_rot, pos, cfg.rope_theta)
+        return jnp.concatenate([t_rot, t_pass], axis=-1)
+
+    q = apply_rope(q, positions)
+    k = apply_rope(k, positions)
+
+    new_cache = None
+    if mode == "decode":
+        if cfg.kv_cache_bits == 8:
+            k_store = jnp.clip(jnp.round(k.astype(jnp.float32) * cfg.kv_scale), -127, 127).astype(jnp.int8)
+            v_store = jnp.clip(jnp.round(v.astype(jnp.float32) * cfg.kv_scale), -127, 127).astype(jnp.int8)
+            cache = KVCache.append_one(cache, k_store, v_store)
+            out = attn_lib.decode_attend(
+                q, cache, softcap=cfg.attn_softcap, window=kind.window,
+                kv_inv_scale=1.0 / cfg.kv_scale,
+            )
+        else:
+            cache = KVCache.append_one(cache, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype))
+            out = attn_lib.decode_attend(
+                q, cache, softcap=cfg.attn_softcap, window=kind.window
+            )
+        new_cache = cache
+    else:
+        pos1d = positions[0] if positions.ndim == 2 else positions
+        attend_fn = attn_lib.attend_chunked if S >= 4096 else attn_lib.attend
+        out = attend_fn(
+            q,
+            k,
+            v,
+            mask=AttnMask(causal=True, window=kind.window),
+            q_positions=pos1d,
+            k_positions=pos1d,
+            softcap=cfg.attn_softcap,
+        )
+        if mode == "prefill":
+            new_cache = {
+                "k": k.astype(cfg.compute_dtype),
+                "v": v.astype(cfg.compute_dtype),
+                "len": jnp.full((B,), S, jnp.int32),
+            }
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return qdot(out, p["wo"]), new_cache
+
+
+def _block_apply(cfg, kind, p, x, positions, pos3, mode, cache):
+    """Pre-norm block. Returns (x, new_cache, aux_loss)."""
+    h = rms_norm(x, p["norm1"])
+    if kind.mixer == "attn":
+        mix, new_cache = _attn_apply(cfg, kind, p["attn"], h, positions, pos3, mode, cache)
+    else:
+        if mode == "decode":
+            mix, new_cache = ssm_decode_step(cfg.ssm, p["ssm"], cache, h)
+        else:
+            mix, state, conv_state = ssm_apply(cfg.ssm, p["ssm"], h)
+            new_cache = None
+            if mode == "prefill":
+                new_cache = {"conv": conv_state.astype(jnp.float32), "state": state}
+    if cfg.sandwich_norm:
+        mix = rms_norm(mix, p["post_norm1"])
+    x = x + mix
+    x = constrain(x, "batch", None, None)
+
+    aux = jnp.zeros((), jnp.float32)
+    if kind.moe or cfg.d_ff > 0:
+        h = rms_norm(x, p["norm2"])
+        if kind.moe:
+            ff, aux = moe_apply(cfg.moe, p["moe"], h)
+        else:
+            ff = mlp_apply(MLPConfig(cfg.d_model, cfg.d_ff, cfg.act), p["mlp"], h)
+        if cfg.sandwich_norm:
+            ff = rms_norm(ff, p["post_norm2"])
+        x = x + ff
+        x = constrain(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Full forward passes
+# --------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens, vision_embeds=None):
+    h = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, cfg.compute_dtype)
+    if vision_embeds is not None:
+        # VLM: precomputed patch embeddings (frontend stub) are prepended.
+        h = jnp.concatenate([vision_embeds.astype(cfg.compute_dtype), h], axis=1)
+    return constrain(h, "batch", None, None)
+
+
+def _logits(cfg, params, h):
+    h = rms_norm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32), head.astype(jnp.float32))
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return constrain(logits, "batch", None, "tp")
+
+
+def _scan_blocks(cfg, params, h, positions, pos3, mode, caches):
+    """Scan over repeat groups; within a group, pattern positions unroll."""
+    pattern = layer_pattern(cfg)
+
+    def group_body(h, xs):
+        block_params, group_caches = xs
+        new_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            cache_i = None if group_caches is None else group_caches[f"pos{i}"]
+            h, new_cache, aux = _block_apply(
+                cfg, kind, block_params[f"pos{i}"], h, positions, pos3, mode, cache_i
+            )
+            aux_total = aux_total + aux
+            new_caches.append(new_cache)
+        out_caches = None
+        if any(c is not None for c in new_caches):
+            out_caches = {f"pos{i}": c for i, c in enumerate(new_caches) if c is not None}
+        return h, (out_caches, aux_total)
+
+    body = group_body
+    if cfg.remat == "block":
+        body = jax.checkpoint(group_body)
+
+    xs = (params["blocks"], caches)
+    h, (new_caches, aux) = common_scan(body, h, xs)
+    return h, new_caches, jnp.sum(aux)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None, pos3=None, vision_embeds=None):
+    """Training forward: tokens [B, S] -> (logits [B, S(+vis), V], aux_loss)."""
+    h = _embed_tokens(cfg, params, tokens, vision_embeds)
+    S = h.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    if cfg.mrope and pos3 is None:
+        pos3 = jnp.broadcast_to(jnp.arange(S)[None, None, :], (3, h.shape[0], S))
+    h, _, aux = _scan_blocks(cfg, params, h, positions, pos3, "train", None)
+    return _logits(cfg, params, h), aux
+
+
+def _chunked_ce(cfg: ModelConfig, params, h, targets, chunk: int = 512):
+    """Sequence-chunked cross-entropy.
+
+    Materialising [B, S, V] f32 logits at 256k vocab x 4k seq is multiple GB
+    per device; computing the head matmul + log-softmax per sequence chunk
+    inside a scan keeps the live logits tensor at [B, chunk, V_shard].
+    """
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    B, S, D = h.shape
+    if S % chunk:
+        chunk = S  # fall back to one shot for odd smoke shapes
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hc, tc = xs
+        logits = jnp.einsum("bsd,dv->bsv", hc.astype(jnp.float32), head.astype(jnp.float32))
+        if cfg.logit_softcap is not None:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        logits = constrain(logits, "batch", None, "tp")
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return acc - jnp.sum(ll), None
+
+    total, _ = common_scan(body, jnp.zeros((), jnp.float32), (hs, ts))
+    return total / (B * S)
+
+
+def lm_loss(cfg: ModelConfig, params, batch):
+    """Next-token cross-entropy (+ MoE aux). batch: tokens/targets [B, S]."""
+    h = _embed_tokens(cfg, params, batch["tokens"], batch.get("vision_embeds"))
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    pos3 = batch.get("positions3")
+    if cfg.mrope and pos3 is None:
+        pos3 = jnp.broadcast_to(jnp.arange(S)[None, None, :], (3, h.shape[0], S))
+    h, _, aux = _scan_blocks(cfg, params, h, positions, pos3, "train", None)
+    h = rms_norm(h, params["final_norm"])
+    targets = batch["targets"]
+    # VLM: loss over the text tail (targets align with the text tokens).
+    h = h[:, -targets.shape[1] :, :]
+    ce = _chunked_ce(cfg, params, h, targets)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# --------------------------------------------------------------------------
+
+
+def cache_template(cfg: ModelConfig, batch: int, max_len: int):
+    pattern = layer_pattern(cfg)
+    ng = n_groups(cfg)
+    kv_dtype = jnp.int8 if cfg.kv_cache_bits == 8 else cfg.compute_dtype
+
+    def one(kind):
+        if kind.mixer == "attn":
+            return KVCache.template(batch, max_len, cfg.n_kv_heads, cfg.d_head, kv_dtype)
+        return ssm_cache_template(cfg.ssm, batch)
+
+    stacked = {}
+    for i, kind in enumerate(pattern):
+        t = one(kind)
+        stacked[f"pos{i}"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((ng, *s.shape), s.dtype), t
+        )
+    return stacked
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_template(cfg, batch, max_len)
+    )
+
+
+def cache_specs(cfg: ModelConfig, batch_axes, tp_axis, seq_axis=None):
+    """PartitionSpecs matching cache_template: KV sharded [batch, seq?, kv-heads]."""
+    from jax.sharding import PartitionSpec as P
+
+    pattern = layer_pattern(cfg)
+    out = {}
+    for i, kind in enumerate(pattern):
+        if kind.mixer == "attn":
+            out[f"pos{i}"] = {
+                "k": P(None, batch_axes, seq_axis, tp_axis, None),
+                "v": P(None, batch_axes, seq_axis, tp_axis, None),
+                "len": P(None, batch_axes),
+            }
+        else:
+            out[f"pos{i}"] = {
+                "conv": P(None, batch_axes, None, tp_axis),
+                "state": P(None, batch_axes, tp_axis, None, None),
+            }
+    return out
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, pos3=None, vision_embeds=None):
+    """Full-context forward that also returns per-layer caches.
+
+    Note: prefill emits exact-length caches ([B, S, ...]); the serving layer
+    (repro.serve) copies them into its fixed-size decode buffers.
+    """
+    h = _embed_tokens(cfg, params, tokens, vision_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    if cfg.mrope and pos3 is None:
+        pos3 = jnp.broadcast_to(jnp.arange(S)[None, None, :], (3, h.shape[0], S))
+    h, caches, _ = _scan_blocks(cfg, params, h, positions, pos3, "prefill", None)
+    logits = _logits(cfg, params, h[:, -1:, :])
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, cur_len):
+    """One-token decode. tokens [B, 1]; cur_len [B] current context length."""
+    h = _embed_tokens(cfg, params, tokens)
+    positions = cur_len[:, None]  # [B, 1]
+    pos3 = None
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(positions[None], (3, *positions.shape))
+    # positions per-sample: rope() expects [B, S]; arange default is [S].
+    h, new_caches, _ = _scan_blocks(cfg, params, h, positions, pos3, "decode", caches)
+    logits = _logits(cfg, params, h)
+    return logits, new_caches

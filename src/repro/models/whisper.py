@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs`` provides
+precomputed mel-frame *embeddings* [B, S_enc, d_model] (what the two conv
+layers would emit).  The transformer backbone is complete: bidirectional
+encoder, causal decoder with cross-attention, learned decoder positions,
+sinusoidal encoder positions, LayerNorm + GELU (the Whisper family's
+conventions).
+
+Decode shapes: Whisper's decoder context is capped at ``dec_max_len`` (448),
+so the 32k of ``decode_32k`` applies to the *encoder* context; ``long_500k``
+is skipped (full-attention encoder) -- see DESIGN.md section 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import qdot
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models.attention import AttnMask, KVCache
+from repro.models.common import FSDP, TP, dense, layer_norm
+from repro.models.common import scan as common_scan
+from repro.models.mlp import MLPConfig, mlp_apply, mlp_template
+
+__all__ = ["WhisperConfig", "whisper_template", "whisper_forward", "whisper_encode", "whisper_decode_step", "whisper_cache_template"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    dec_max_len: int = 448
+    compute_dtype: object = jnp.bfloat16
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def _norm_t(d):
+    return {"w": dense(d, init="ones"), "b": dense(d, init="zeros")}
+
+
+def _attn_t(cfg: WhisperConfig, cross: bool = False) -> dict:
+    d = cfg.d_model
+    return {
+        "wq": dense(d, d, logical=(FSDP, TP)),
+        "wk": dense(d, d, logical=(FSDP, TP)),
+        "wv": dense(d, d, logical=(FSDP, TP)),
+        "wo": dense(d, d, logical=(TP, FSDP)),
+    }
+
+
+def _enc_block_t(cfg):
+    return {
+        "norm1": _norm_t(cfg.d_model),
+        "attn": _attn_t(cfg),
+        "norm2": _norm_t(cfg.d_model),
+        "mlp": mlp_template(MLPConfig(cfg.d_model, cfg.d_ff, "gelu")),
+    }
+
+
+def _dec_block_t(cfg):
+    return {
+        "norm1": _norm_t(cfg.d_model),
+        "self_attn": _attn_t(cfg),
+        "norm2": _norm_t(cfg.d_model),
+        "cross_attn": _attn_t(cfg, cross=True),
+        "norm3": _norm_t(cfg.d_model),
+        "mlp": mlp_template(MLPConfig(cfg.d_model, cfg.d_ff, "gelu")),
+    }
+
+
+def _stack(template, n: int):
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n, *s.shape), logical=(None, *(s.logical or (None,) * len(s.shape)))
+        ),
+        template,
+        is_leaf=lambda x: hasattr(x, "logical"),
+    )
+
+
+def whisper_template(cfg: WhisperConfig) -> dict:
+    return {
+        "embed": dense(cfg.vocab, cfg.d_model, logical=(TP, FSDP), scale=0.02),
+        "dec_pos": dense(cfg.dec_max_len, cfg.d_model, logical=(None, FSDP), scale=0.02),
+        "enc_blocks": _stack(_enc_block_t(cfg), cfg.n_enc_layers),
+        "dec_blocks": _stack(_dec_block_t(cfg), cfg.n_dec_layers),
+        "enc_norm": _norm_t(cfg.d_model),
+        "dec_norm": _norm_t(cfg.d_model),
+    }
+
+
+def _sinusoids(length: int, channels: int):
+    """Whisper's sinusoidal encoder positions."""
+    log_timescale = jnp.log(10_000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _mha(cfg, p, xq, xkv, mask: AttnMask | None, cache=None, decode=False):
+    """Standard MHA (optionally cross / cached)."""
+    B, Sq, D = xq.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    q = qdot(xq, p["wq"]).reshape(B, Sq, H, dh)
+    if cache is not None and decode:
+        out = attn_lib.decode_attend(q, cache)
+    else:
+        if xkv is None:
+            xkv = xq
+        k = qdot(xkv, p["wk"]).reshape(B, xkv.shape[1], H, dh)
+        v = qdot(xkv, p["wv"]).reshape(B, xkv.shape[1], H, dh)
+        attend_fn = attn_lib.attend_chunked if Sq >= 4096 else attn_lib.attend
+        out = attend_fn(q, k, v, mask=mask or AttnMask(causal=False))
+    return qdot(out.reshape(B, Sq, D), p["wo"])
+
+
+def whisper_encode(cfg: WhisperConfig, params, frames):
+    """frames [B, S_enc, D] (precomputed conv-frontend output) -> enc states."""
+    h = frames.astype(cfg.compute_dtype)
+    h = h + _sinusoids(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+    h = constrain(h, "batch", None, None)
+
+    def body(h, p):
+        a = _mha(cfg, p["attn"], layer_norm(h, p["norm1"]["w"], p["norm1"]["b"]), None, AttnMask(causal=False))
+        h = h + a
+        m = mlp_apply(MLPConfig(cfg.d_model, cfg.d_ff, "gelu"), p["mlp"], layer_norm(h, p["norm2"]["w"], p["norm2"]["b"]))
+        h = constrain(h + m, "batch", None, None)
+        return h, None
+
+    h, _ = common_scan(body, h, params["enc_blocks"])
+    return layer_norm(h, params["enc_norm"]["w"], params["enc_norm"]["b"])
+
+
+def _decode_blocks(cfg, params, h, enc_out, mode, caches):
+    """mode: train (full seq, causal) | decode (1 token vs caches)."""
+
+    def body(h, xs):
+        p, cache = xs
+        if mode == "decode":
+            sa_cache = KVCache.append_one(
+                cache["self"],
+                qdot(layer_norm(h, p["norm1"]["w"], p["norm1"]["b"]), p["self_attn"]["wk"]).reshape(
+                    h.shape[0], 1, cfg.n_heads, cfg.d_head
+                ),
+                qdot(layer_norm(h, p["norm1"]["w"], p["norm1"]["b"]), p["self_attn"]["wv"]).reshape(
+                    h.shape[0], 1, cfg.n_heads, cfg.d_head
+                ),
+            )
+            a = _mha(cfg, p["self_attn"], layer_norm(h, p["norm1"]["w"], p["norm1"]["b"]), None, None, cache=sa_cache, decode=True)
+            h = h + a
+            c = _mha(cfg, p["cross_attn"], layer_norm(h, p["norm2"]["w"], p["norm2"]["b"]), None, None, cache=cache["cross"], decode=True)
+            h = h + c
+            new_cache = {"self": sa_cache, "cross": cache["cross"]}
+        else:
+            a = _mha(cfg, p["self_attn"], layer_norm(h, p["norm1"]["w"], p["norm1"]["b"]), None, AttnMask(causal=True))
+            h = h + a
+            c = _mha(cfg, p["cross_attn"], layer_norm(h, p["norm2"]["w"], p["norm2"]["b"]), enc_out, AttnMask(causal=False))
+            h = h + c
+            new_cache = None
+        m = mlp_apply(MLPConfig(cfg.d_model, cfg.d_ff, "gelu"), p["mlp"], layer_norm(h, p["norm3"]["w"], p["norm3"]["b"]))
+        h = constrain(h + m, "batch", None, None)
+        return h, new_cache
+
+    return common_scan(body, h, (params["dec_blocks"], caches))
+
+
+def whisper_forward(cfg: WhisperConfig, params, frames, tokens):
+    """Training forward -> logits [B, S_dec, V]."""
+    enc_out = whisper_encode(cfg, params, frames)
+    h = params["embed"].astype(cfg.compute_dtype)[tokens]
+    S = tokens.shape[1]
+    h = h + params["dec_pos"][:S].astype(h.dtype)[None]
+    h, _ = _decode_blocks(cfg, params, h, enc_out, "train", None)
+    h = layer_norm(h, params["dec_norm"]["w"], params["dec_norm"]["b"])
+    return jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), params["embed"].astype(jnp.float32))
+
+
+def whisper_loss(cfg: WhisperConfig, params, batch):
+    logits = whisper_forward(cfg, params, batch["audio_frames"], batch["tokens"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll), {"ce": -jnp.mean(ll)}
+
+
+def whisper_cache_template(cfg: WhisperConfig, batch: int, enc_len: int):
+    self_t = KVCache.template(batch, cfg.dec_max_len, cfg.n_heads, cfg.d_head, cfg.compute_dtype)
+    cross_t = KVCache.template(batch, enc_len, cfg.n_heads, cfg.d_head, cfg.compute_dtype)
+    one = {"self": self_t, "cross": cross_t}
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_dec_layers, *s.shape), s.dtype), one
+    )
+
+
+def whisper_prefill(cfg: WhisperConfig, params, frames):
+    """Encode audio and precompute the cross-attention KV caches."""
+    enc_out = whisper_encode(cfg, params, frames)
+    B, Se, D = enc_out.shape
+
+    def body(_, p):
+        k = qdot(enc_out, p["cross_attn"]["wk"]).reshape(B, Se, cfg.n_heads, cfg.d_head)
+        v = qdot(enc_out, p["cross_attn"]["wv"]).reshape(B, Se, cfg.n_heads, cfg.d_head)
+        return None, {
+            "k": k.astype(cfg.compute_dtype),
+            "v": v.astype(cfg.compute_dtype),
+            "len": jnp.full((B,), Se, jnp.int32),
+        }
+
+    _, cross = common_scan(body, None, params["dec_blocks"])
+    self_cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        KVCache.template(B, cfg.dec_max_len, cfg.n_heads, cfg.d_head, cfg.compute_dtype),
+    )
+    self_cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_dec_layers, *x.shape)), self_cache
+    )
+    return {"self": self_cache, "cross": cross}
+
+
+def whisper_decode_step(cfg: WhisperConfig, params, caches, tokens, cur_len):
+    """One decoder token against self + cross caches. tokens [B, 1]."""
+    h = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pos = jnp.clip(cur_len, 0, cfg.dec_max_len - 1)
+    h = h + params["dec_pos"][pos][:, None, :].astype(h.dtype)
+    h, new_caches = _decode_blocks(cfg, params, h, None, "decode", caches)
+    h = layer_norm(h, params["dec_norm"]["w"], params["dec_norm"]["b"])
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), params["embed"].astype(jnp.float32))
+    return logits, new_caches

@@ -1,0 +1,47 @@
+"""Surrogate-gradient spike nonlinearities for BPTT (SNN-Torch equivalents).
+
+Forward: Heaviside on the membrane-minus-threshold argument.
+Backward: a smooth surrogate -- the fast-sigmoid derivative used by
+SNN-Torch's default (``1 / (slope*|x| + 1)^2``) or an arctan variant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fast_sigmoid", "atan_surrogate"]
+
+
+def fast_sigmoid(slope: float = 25.0):
+    """SNN-Torch's default surrogate."""
+
+    @jax.custom_vjp
+    def spike(x):
+        return (x >= 0).astype(jnp.float32)
+
+    def fwd(x):
+        return spike(x), x
+
+    def bwd(x, g):
+        return (g / (slope * jnp.abs(x) + 1.0) ** 2,)
+
+    spike.defvjp(fwd, bwd)
+    return spike
+
+
+def atan_surrogate(alpha: float = 2.0):
+    """ArcTan surrogate (Fang et al.); wider gradient support."""
+
+    @jax.custom_vjp
+    def spike(x):
+        return (x >= 0).astype(jnp.float32)
+
+    def fwd(x):
+        return spike(x), x
+
+    def bwd(x, g):
+        return (g * alpha / (2.0 * (1.0 + (jnp.pi / 2.0 * alpha * x) ** 2)),)
+
+    spike.defvjp(fwd, bwd)
+    return spike

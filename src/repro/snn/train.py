@@ -1,0 +1,158 @@
+"""BPTT trainer for Flexi-NeurA networks (the Flex-plorer "Learning" stage).
+
+Trains the float model with surrogate gradients (hardware-ordered dynamics,
+see ``repro.core.snn_layer.float_layer_step``), then hands weights + leak
+parameters to the Explorer for precision DSE, exactly as the paper's flow
+(GUI -> Learning -> Explorer -> RTL Configurator) does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_float, run_int
+from repro.data.snn_datasets import SpikeDataset
+from repro.snn.surrogate import fast_sigmoid
+from repro.train import optimizer as opt_lib
+
+__all__ = ["TrainResult", "train_snn", "eval_float", "eval_int", "spike_count_loss"]
+
+
+def spike_count_loss(counts, labels, rate_reg: float = 1e-4, total_spikes=None):
+    """Cross-entropy over output spike counts (rate decoding) + rate penalty.
+
+    The rate penalty encourages the sparsity that the event-driven hardware's
+    latency/energy model rewards -- the software knob that corresponds to the
+    paper's observed sparse traffic.
+    """
+    logp = jax.nn.log_softmax(counts.astype(jnp.float32))
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    reg = 0.0
+    if total_spikes is not None:
+        reg = rate_reg * jnp.mean(total_spikes)
+    return ce + reg
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: list
+    history: list[dict]
+    net: NetworkConfig
+
+
+def train_snn(
+    net: NetworkConfig,
+    train_ds: SpikeDataset,
+    *,
+    epochs: int = 8,
+    batch_size: int = 128,
+    lr: float = 2e-3,
+    seed: int = 0,
+    rate_reg: float = 1e-4,
+    surrogate_slope: float = 25.0,
+    log_every: int = 0,
+    eval_ds: SpikeDataset | None = None,
+) -> TrainResult:
+    key = jax.random.PRNGKey(seed)
+    params = init_float_params(key, net)
+    spike_fn = fast_sigmoid(surrogate_slope)
+
+    steps_per_epoch = len(train_ds.labels) // batch_size
+    optimizer = opt_lib.adamw(
+        opt_lib.linear_warmup_cosine(lr, steps_per_epoch, epochs * steps_per_epoch)
+    )
+    opt_state = optimizer.init(params)
+
+    def loss_fn(params, spikes, labels):
+        rec = run_float(net, params, spikes, spike_fn)
+        total = sum(jnp.sum(s) for s in rec.layer_spikes) / spikes.shape[1]
+        loss = spike_count_loss(rec.spike_counts, labels, rate_reg, total)
+        acc = jnp.mean((rec.predictions() == labels).astype(jnp.float32))
+        return loss, acc
+
+    @jax.jit
+    def train_step(params, opt_state, spikes, labels):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, spikes, labels)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, loss, acc, gnorm
+
+    rng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        t0 = time.time()
+        losses, accs = [], []
+        for spikes, labels in train_ds.batches(batch_size, rng):
+            params, opt_state, loss, acc, gnorm = train_step(
+                params, opt_state, jnp.asarray(spikes), jnp.asarray(labels)
+            )
+            losses.append(float(loss))
+            accs.append(float(acc))
+        entry = {
+            "epoch": epoch,
+            "loss": float(np.mean(losses)),
+            "train_acc": float(np.mean(accs)),
+            "seconds": time.time() - t0,
+        }
+        if eval_ds is not None:
+            entry["eval_acc"] = eval_float(net, params, eval_ds, surrogate_slope)
+        history.append(entry)
+        if log_every and (epoch % log_every == 0 or epoch == epochs - 1):
+            print(f"[train_snn:{net.name}] {entry}")
+    return TrainResult(params=params, history=history, net=net)
+
+
+def eval_float(net, params, ds: SpikeDataset, surrogate_slope: float = 25.0, batch_size: int = 256) -> float:
+    spike_fn = fast_sigmoid(surrogate_slope)
+
+    @jax.jit
+    def fwd(params, spikes):
+        return run_float(net, params, spikes, spike_fn).predictions()
+
+    correct = total = 0
+    for spikes, labels in ds.batches(batch_size):
+        preds = np.asarray(fwd(params, jnp.asarray(spikes)))
+        correct += int((preds == labels).sum())
+        total += len(labels)
+    return correct / max(1, total)
+
+
+def eval_int(net, qparams, ds: SpikeDataset, batch_size: int = 256, return_stats: bool = False):
+    """Bit-exact hardware-faithful accuracy (the DSE's accuracy evaluator).
+
+    With ``return_stats``, also returns per-layer mean events per step and
+    input events per step -- the latency/energy model inputs.
+    """
+
+    @jax.jit
+    def fwd(spikes):
+        rec = run_int(net, qparams, spikes)
+        return rec.predictions(), [jnp.mean(s, axis=1) for s in rec.layer_spikes]
+
+    correct = total = 0
+    layer_ev = None
+    in_ev = None
+    n_batches = 0
+    for spikes, labels in ds.batches(batch_size):
+        spikes = jnp.asarray(spikes)
+        preds, evs = fwd(spikes)
+        correct += int((np.asarray(preds) == labels).sum())
+        total += len(labels)
+        n_batches += 1
+        evs = [np.asarray(e) for e in evs]
+        iev = np.asarray(spikes.sum(-1).mean(-1))
+        layer_ev = evs if layer_ev is None else [a + b for a, b in zip(layer_ev, evs)]
+        in_ev = iev if in_ev is None else in_ev + iev
+    acc = correct / max(1, total)
+    if not return_stats:
+        return acc
+    layer_ev = [e / n_batches for e in layer_ev]
+    in_ev = in_ev / n_batches
+    return acc, {"input_events_per_step": in_ev, "layer_events_per_step": layer_ev}

@@ -1,0 +1,141 @@
+"""Optimizers built from scratch on pytrees (no optax dependency).
+
+Provides AdamW and SGD-momentum with the (init, update) functional interface,
+global-norm gradient clipping, and schedules.  Used by both the SNN trainer
+and the LM training loop; optimizer state is a pytree so it checkpoints and
+re-shards exactly like parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "constant_schedule",
+    "linear_warmup_cosine",
+]
+
+
+class Optimizer(NamedTuple):
+    """(init, update) pair; update(grads, state, params) -> (updates, state)."""
+
+    init: Callable
+    update: Callable
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object  # first-moment pytree
+    nu: object  # second-moment pytree
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    *,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads)
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(m.dtype)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: object
+
+
+def sgd(lr, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        buf = jax.tree.map(lambda b, g: momentum * b + g, state.momentum, grads)
+        if nesterov:
+            eff = jax.tree.map(lambda g, b: g + momentum * b, grads, buf)
+        else:
+            eff = buf
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(lambda e, p: (-lr_t * e).astype(p.dtype), eff, params)
+        return updates, SGDState(step=step, momentum=buf)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def constant_schedule(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup_steps), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(1, warmup_steps)
+        return jnp.where(step <= warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

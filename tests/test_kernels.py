@@ -1,0 +1,129 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import pack_int4, quantize_weight, unpack_int4
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lif_scan.lif_scan import lif_scan
+from repro.kernels.lif_scan.ref import lif_scan_ref
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+# ---------------------------------------------------------------------------
+# lif_scan: bit-exact vs oracle across shapes / decay codes / widths / resets
+# ---------------------------------------------------------------------------
+
+LIF_CASES = [
+    # (T, B, N, theta, k, u_bits, reset_to_zero, block_b, block_n)
+    (5, 8, 128, 500, 153, 16, False, 8, 128),
+    (20, 16, 256, 900, 256, 12, False, 8, 128),
+    (7, 8, 128, 300, 0, 10, True, 8, 128),
+    (3, 16, 384, 100, 255, 16, True, 8, 128),
+    (11, 8, 128, 50, 128, 8, False, 4, 64),
+]
+
+
+@pytest.mark.parametrize("T,B,N,theta,k,u_bits,zero,bb,bn", LIF_CASES)
+def test_lif_scan_bit_exact(T, B, N, theta, k, u_bits, zero, bb, bn):
+    cur = jax.random.randint(jax.random.PRNGKey(T * N + k), (T, B, N), -300, 400, jnp.int32)
+    s1, u1 = lif_scan(
+        cur, theta_q=theta, decay_k=k, u_bits=u_bits, reset_to_zero=zero,
+        block_b=bb, block_n=bn, interpret=True,
+    )
+    s2, u2 = lif_scan_ref(cur, theta, k, u_bits, zero)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul: exact vs oracle (both dequantize identically) over bits/shapes
+# ---------------------------------------------------------------------------
+
+QM_CASES = [
+    (8, 256, 1024, 256, jnp.bfloat16),
+    (8, 128, 512, 128, jnp.float32),
+    (6, 128, 512, 128, jnp.bfloat16),
+    (5, 128, 1024, 256, jnp.bfloat16),
+    (4, 128, 512, 256, jnp.bfloat16),
+    (4, 256, 1536, 512, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("bits,M,K,N,dtype", QM_CASES)
+def test_quant_matmul_matches_oracle(bits, M, K, N, dtype):
+    kw, kx = jax.random.split(jax.random.PRNGKey(bits * M))
+    w = jax.random.normal(kw, (K, N), jnp.float32) * 0.02
+    x = jax.random.normal(kx, (M, K), jnp.float32).astype(dtype)
+    qt = quantize_weight(w, bits)
+    ref = quant_matmul_ref(x, qt)
+    out = quant_matmul(x, qt.q, qt.scale, bits=bits, interpret=True, out_dtype=dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=0, atol=1e-5
+    )
+
+
+@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64).filter(lambda l: len(l) % 2 == 0))
+@settings(max_examples=100, deadline=None)
+def test_int4_pack_roundtrip(values):
+    v = jnp.asarray(values, jnp.int8).reshape(1, -1)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(v))), np.asarray(v))
+
+
+@given(bits=st.integers(4, 8), seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_quantize_weight_error_bound(bits, seed):
+    """Per-column quantization error <= scale/2 (round-to-nearest)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 16), jnp.float32)
+    qt = quantize_weight(w, bits)
+    from repro.core.precision import dequantize_weight
+
+    back = np.asarray(dequantize_weight(qt, jnp.float32))
+    err = np.abs(back - np.asarray(w))
+    assert np.all(err <= np.asarray(qt.scale)[None, :] * 0.5 + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: allclose vs oracle across mask configurations
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    ((2, 4, 512, 512, 64), dict(causal=True)),
+    ((1, 2, 1024, 1024, 128), dict(causal=True, window=256)),
+    ((1, 2, 512, 512, 64), dict(causal=True, softcap=50.0)),
+    ((1, 2, 256, 512, 64), dict(causal=False)),
+    ((1, 1, 256, 256, 128), dict(causal=True, window=64, softcap=30.0)),
+]
+
+
+@pytest.mark.parametrize("shape,kwargs", FA_CASES)
+def test_flash_attention_matches_oracle(shape, kwargs):
+    B, H, Sq, Sk, D = shape
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(Sq + D), 3)
+    q = jax.random.normal(kq, (B, H, Sq, D), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(kk, (B, H, Sk, D), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(kv, (B, H, Sk, D), jnp.float32).astype(jnp.bfloat16)
+    ref = flash_attention_ref(q, k, v, **kwargs)
+    out = flash_attention(q, k, v, bq=128, bk=128, interpret=True, **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=0.05, rtol=0.05
+    )
+
+
+def test_flash_gqa_wrapper():
+    from repro.kernels.flash_attention.ops import flash_attend
+    from repro.models.attention import AttnMask, attend
+
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(kq, (2, 256, 8, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(kk, (2, 256, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(kv, (2, 256, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    ref = attend(q, k, v, mask=AttnMask(causal=True))
+    out = flash_attend(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=0.05, rtol=0.05
+    )

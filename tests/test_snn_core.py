@@ -1,0 +1,157 @@
+"""SNN core: the vectorised bit-exact simulator vs the strict per-event
+reference (the hardware contract), plus hw-model anchors."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hw_model
+from repro.core.events import EventDrivenCore, PacketKind, decode_packet, encode_packet, raster_to_packets
+from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
+from repro.core.snn_layer import (
+    IntLayerParams,
+    LayerConfig,
+    NeuronModel,
+    ResetMode,
+    Topology,
+    int_layer_init,
+    int_layer_step,
+)
+
+NEURONS = [NeuronModel.IF, NeuronModel.LIF, NeuronModel.SYNAPTIC]
+TOPOS = [Topology.FF, Topology.ATA_F, Topology.ATA_T]
+
+
+@st.composite
+def layer_case(draw):
+    cfg = LayerConfig(
+        n_in=draw(st.integers(2, 12)),
+        n_out=draw(st.integers(2, 10)),
+        neuron=draw(st.sampled_from(NEURONS)),
+        topology=draw(st.sampled_from(TOPOS)),
+        reset=draw(st.sampled_from([ResetMode.ZERO, ResetMode.SUBTRACT])),
+        w_bits=draw(st.integers(3, 8)),
+        u_bits=16,
+        i_bits=16,
+        leak_bits=draw(st.integers(2, 8)),
+        beta=draw(st.floats(0.3, 0.99)),
+        alpha=draw(st.floats(0.3, 0.99)),
+        threshold=1.0,
+    )
+    T = draw(st.integers(2, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return cfg, T, seed
+
+
+@given(layer_case())
+@settings(max_examples=40, deadline=None)
+def test_vectorised_matches_event_driven_reference(case):
+    """int_layer_step (TPU path) == EventDrivenCore (per-event RTL model)."""
+    cfg, T, seed = case
+    rng = np.random.default_rng(seed)
+    w_ff = rng.integers(-20, 21, (cfg.n_in, cfg.n_out))
+    if cfg.topology == Topology.ATA_T:
+        w_rec = rng.integers(-10, 11, (cfg.n_out, cfg.n_out))
+    elif cfg.topology == Topology.ATA_F:
+        w_rec = np.asarray(rng.integers(-10, 11))
+    else:
+        w_rec = np.zeros((0,), np.int64)
+    theta = 40
+    raster = (rng.random((T, cfg.n_in)) < 0.3).astype(np.int64)
+
+    core = EventDrivenCore(cfg, w_ff, w_rec, theta)
+    ref_spikes = np.zeros((T, cfg.n_out), np.int64)
+    for t in range(T):
+        fired = core.step(list(np.nonzero(raster[t])[0]), last=(t == T - 1))
+        ref_spikes[t, fired] = 1
+
+    params = IntLayerParams(
+        w_ff=jnp.asarray(w_ff, jnp.int32),
+        w_rec=jnp.asarray(w_rec, jnp.int32),
+        theta_q=jnp.asarray(theta, jnp.int32),
+    )
+    state = int_layer_init(cfg, batch=1)
+    got = np.zeros_like(ref_spikes)
+    for t in range(T):
+        state, spk = int_layer_step(cfg, params, state, jnp.asarray(raster[None, t]))
+        got[t] = np.asarray(spk[0])
+    np.testing.assert_array_equal(got, ref_spikes)
+
+
+def test_packet_roundtrip():
+    for kind, addr in [(PacketKind.ASPL, 7), (PacketKind.ASCL, 255), (PacketKind.EOTS, 0), (PacketKind.EOIN, 0)]:
+        word = encode_packet(kind, addr)
+        got_kind, payload = decode_packet(word, recurrent_path=(kind == PacketKind.ASCL))
+        assert got_kind == kind
+        if kind in (PacketKind.ASPL, PacketKind.ASCL):
+            assert payload == addr
+
+
+def test_raster_to_packets_ends_with_eoin():
+    raster = np.asarray([[1, 0, 1], [0, 0, 0]])
+    steps = raster_to_packets(raster)
+    assert decode_packet(steps[0][-1])[0] == PacketKind.EOTS
+    assert decode_packet(steps[1][-1])[0] == PacketKind.EOIN
+    assert len(steps[0]) == 3  # two ASPL + EOTS
+
+
+# ---------------------------------------------------------------------------
+# hardware model anchors (paper Table 2 design point)
+# ---------------------------------------------------------------------------
+
+
+def _paper_net():
+    return NetworkConfig(
+        layers=(
+            LayerConfig(n_in=256, n_out=128, w_bits=6, u_bits=8),
+            LayerConfig(n_in=128, n_out=10, w_bits=6, u_bits=8),
+        ),
+        n_steps=100,
+        name="mnist-paper",
+    )
+
+
+def test_resource_anchor_exact():
+    res = hw_model.network_resources(_paper_net())
+    assert res.lut == pytest.approx(934, abs=1.0)
+    assert res.ff == pytest.approx(689, abs=1.0)
+    assert res.bram == 7
+    assert res.logic_cells == pytest.approx(1623, abs=2.0)
+
+
+def test_power_anchor():
+    p = hw_model.power_watts(_paper_net(), events_per_second=1e6)
+    assert p == pytest.approx(0.111, abs=0.004)
+
+
+def test_resources_monotone_in_bits():
+    lo = _paper_net()
+    hi = lo.replace_precisions(w_bits=8)
+    assert hw_model.network_resources(hi).lut > hw_model.network_resources(lo).lut
+    assert hw_model.network_resources(hi).bram >= hw_model.network_resources(lo).bram
+
+
+def test_bram36_aspect_selection():
+    # 4096 x 48 maps best as 6 BRAMs in 4Kx9 aspect (paper's core-1 memory)
+    assert hw_model.bram36_count(4096, 48) == 6
+    assert hw_model.bram36_count(256, 48) == 1
+
+
+def test_quantized_network_runs_and_counts_spikes():
+    net = _paper_net()
+    params = init_float_params(jax.random.PRNGKey(0), net)
+    qparams, scales = quantize_params(net, params)
+    spikes = (jax.random.uniform(jax.random.PRNGKey(1), (10, 4, 256)) < 0.1).astype(jnp.int32)
+    rec = run_int(net, qparams, spikes)
+    assert rec.spike_counts.shape == (4, 10)
+    assert all(s.shape == (10, 4) for s in rec.layer_spikes)
+    lat = hw_model.latency_seconds(
+        net,
+        np.asarray(spikes.sum(-1).mean(-1)),
+        [np.asarray(s.mean(-1)) for s in rec.layer_spikes],
+    )
+    assert 0 < lat < 1.0

@@ -1,0 +1,183 @@
+"""Training substrate: optimizer, checkpointing, compression, elasticity,
+data pipeline, fault-tolerant train loop, serving engine."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.data.tokens import SyntheticTokens
+from repro.distributed.elastic import StragglerMonitor, plan_elastic_restart
+from repro.train import optimizer as opt_lib
+from repro.train.grad_compression import compress_leaf, compressed_psum, init_error_state
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_minimises_quadratic():
+    opt = opt_lib.adamw(0.1, weight_decay=0.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        return opt_lib.apply_updates(params, updates), state
+
+    for _ in range(200):
+        params, state = step(params, state)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+    got = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert got == pytest.approx(1.0, rel=1e-4)
+
+
+def test_warmup_cosine_schedule_shape():
+    fn = opt_lib.linear_warmup_cosine(1.0, 10, 100)
+    assert float(fn(jnp.asarray(0))) == pytest.approx(0.0, abs=1e-6)
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(fn(jnp.asarray(100))) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"w": jnp.arange(6).reshape(2, 3).astype(jnp.float32), "opt": {"m": jnp.ones((4,))}}
+    ck.save(10, tree, {"data": {"step": 10}}, blocking=True)
+    ck.save(20, jax.tree.map(lambda x: x * 2, tree), {"data": {"step": 20}})
+    ck.wait()
+    assert latest_step(tmp_path) == 20
+    template = jax.tree.map(jnp.zeros_like, tree)
+    restored, user = ck.restore(template)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(6).reshape(2, 3) * 2)
+    assert user["data"]["step"] == 20
+    # older step restorable too
+    restored10, _ = ck.restore(template, step=10)
+    np.testing.assert_array_equal(np.asarray(restored10["w"]), np.arange(6).reshape(2, 3))
+    # no .tmp dirs left behind == atomic commit
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+def test_checkpoint_gc_keeps_last_k(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree, blocking=True)
+    steps = sorted(int(p.name.split("_")[1]) for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"a": jnp.zeros((2,))}, blocking=True)
+    with pytest.raises(KeyError):
+        ck.restore({"a": jnp.zeros((2,)), "b": jnp.zeros((1,))})
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_compress_leaf_error_feedback_bounded():
+    g = jnp.asarray([0.5, -0.25, 0.1, 0.0])
+    err = jnp.zeros_like(g)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    q, residual = compress_leaf(g, err, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(residual))) <= scale / 2 + 1e-9
+
+
+def test_compressed_psum_exact_mean_under_shared_scale():
+    """With a pmax-agreed scale, dequantised mean error <= scale/2."""
+    devs = jax.devices()
+    from jax.sharding import Mesh
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = Mesh(np.asarray(devs[:1]), ("pod",))
+    g = {"w": jnp.asarray([[0.3, -0.2, 0.05, 0.0]])}
+    err = init_error_state(g)
+
+    def f(g, err):
+        return compressed_psum(g, err, "pod")
+
+    out, new_err = shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")))(g, err)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]), atol=scale / 2 + 1e-9)
+    # error feedback carries exactly the quantization residual
+    np.testing.assert_allclose(
+        np.asarray(new_err["w"]), np.asarray(g["w"] - out["w"]), atol=1e-7
+    )
+
+
+# ---------------------------------------------------------------------------
+# elasticity + stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_plan_shrink_grow():
+    p = plan_elastic_restart(old_chips=512, new_chips=256, global_batch=256)
+    assert p.mesh_shape == (16, 16) and p.mesh_axes == ("data", "model")
+    assert p.per_shard_batch * 16 * p.grad_accum_steps == 256
+    p2 = plan_elastic_restart(old_chips=256, new_chips=512, global_batch=256)
+    assert p2.mesh_axes == ("pod", "data", "model")
+    assert p2.per_shard_batch * 32 * p2.grad_accum_steps == 256
+
+
+def test_elastic_plan_rejects_tp_break():
+    with pytest.raises(ValueError):
+        plan_elastic_restart(old_chips=256, new_chips=250, global_batch=256)
+
+
+def test_straggler_monitor_flags_and_escalates():
+    mon = StragglerMonitor(tolerance=1.5, window=32, min_samples=4)
+    actions = []
+    for step in range(40):
+        dt = 1.0 if step % 7 else 5.0  # every 7th step is slow
+        a = mon.observe(step, dt)
+        if a:
+            actions.append(a)
+    assert "flag" in actions
+    assert "replace" in actions  # persistent slowness escalates
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_tokens_deterministic_and_resumable():
+    a = SyntheticTokens(vocab=97, seq_len=16, batch=4, seed=3)
+    b1, b2 = next(a), next(a)
+    state = a.state()
+    b3 = next(a)
+    c = SyntheticTokens(vocab=97, seq_len=16, batch=4, seed=3)
+    c.restore(state)
+    c3 = next(c)
+    np.testing.assert_array_equal(b3["tokens"], c3["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    # next-token structure exists (targets = tokens shifted)
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_synthetic_tokens_shard_disjoint():
+    a = SyntheticTokens(vocab=97, seq_len=16, batch=4, seed=3, shard=0)
+    b = SyntheticTokens(vocab=97, seq_len=16, batch=4, seed=3, shard=1)
+    assert not np.array_equal(next(a)["tokens"], next(b)["tokens"])
