@@ -1,0 +1,139 @@
+"""Backend benchmark: simulator throughput and DSE candidate rate.
+
+Two measurements on the paper's MNIST-scale 256-128-10 LIF network:
+
+* ``eval_int`` throughput (samples/sec) per inference backend
+  (``reference`` step-major vs ``fused`` layer-major kernel path), steady
+  state (compile excluded by a warmup pass).
+* Flex-plorer DSE candidates/sec, serial annealer vs population mode.
+  Serial mode pays one jit trace+compile per precision candidate (every
+  candidate is a fresh closed-over ``NetworkConfig``); population mode
+  scores whole proposal batches through one reused vmapped program -- the
+  compile cost is the thing being benchmarked, so it is *included* here.
+
+Emits ``BENCH_backend.json`` at the repo root for the perf trajectory
+(full-size runs only -- ``--fast`` smoke passes measure a reduced workload
+and must not clobber the trajectory artifact) and returns the harness's
+``(name, us_per_call, derived)`` rows.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import available_backends
+from repro.core.flexplorer import annealer as annealer_lib
+from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
+from repro.core.snn_layer import LayerConfig, NeuronModel
+from repro.data.snn_datasets import mnist_like
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_backend.json"
+
+ANNEAL = annealer_lib.AnnealConfig(t_start=1.0, t_min=5e-3, alpha=0.6, eval_divisor=2, seed=0)
+SPACE = SNNSearchSpace(ff_bits=(4, 5, 6, 8, 12, 16), leak_bits=(2, 3, 4, 8))
+
+
+def _mnist_net(T: int) -> NetworkConfig:
+    return NetworkConfig(
+        layers=(
+            LayerConfig(n_in=256, n_out=128, neuron=NeuronModel.LIF, w_bits=6, u_bits=16),
+            LayerConfig(n_in=128, n_out=10, neuron=NeuronModel.LIF, w_bits=6, u_bits=16),
+        ),
+        n_steps=T,
+        name="bench-mnist-256-128-10",
+    )
+
+
+def _time_eval(net, qparams, ds, backend: str, repeats: int) -> float:
+    """Steady-state seconds per full-dataset pass through one jitted forward.
+
+    The forward is jitted once and reused across timed passes (``eval_int``
+    itself builds a fresh closure per call, which would re-pay trace+compile
+    every repeat and swamp the simulator time being compared).
+    """
+    fwd = jax.jit(
+        lambda spikes: run_int(net, qparams, spikes, backend=backend).predictions()
+    )
+    batches = [jnp.asarray(s) for s, _ in ds.batches(256)]
+    for b in batches:
+        fwd(b).block_until_ready()  # compile (once per batch shape)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for b in batches:
+            fwd(b).block_until_ready()
+    return (time.perf_counter() - t0) / repeats
+
+
+def _time_dse(net, params, ds, population: int) -> tuple[float, int, int]:
+    """Returns (seconds, total evaluations, search-requested evaluations).
+
+    Both runs execute the identical anneal schedule, so the wall-clock ratio
+    is the search-for-search speedup; total evaluations additionally count
+    the population mode's speculative lane-fill scores (real bit-exact
+    candidate evaluations, but not walker-requested ones).
+    """
+    jax.clear_caches()  # serial's per-candidate compile cost is the workload
+    t0 = time.perf_counter()
+    result = explore_snn(
+        net, params, ds, space=SPACE, anneal_cfg=ANNEAL, eval_batch=256,
+        population=population,
+    )
+    sec = time.perf_counter() - t0
+    return sec, result.anneal.evaluations, result.anneal.requested_evaluations
+
+
+def run(fast: bool = False, population: int = 8):
+    n = 512 if not fast else 256
+    T = 20 if not fast else 10
+    repeats = 10 if not fast else 3
+    ds = mnist_like(n=n, T=T, seed=0)
+    net = _mnist_net(T)
+    params = init_float_params(jax.random.PRNGKey(0), net)
+    qparams, _ = quantize_params(net, params)
+
+    rows = []
+    report: dict = {
+        "net": net.name, "samples": n, "T": T,
+        "jax_backend": jax.default_backend(),
+        "backends": available_backends(),
+        "eval_int": {}, "dse": {},
+    }
+
+    for backend in ("reference", "fused"):
+        sec = _time_eval(net, qparams, ds, backend, repeats)
+        sps = n / sec
+        report["eval_int"][backend] = {"seconds_per_pass": sec, "samples_per_sec": sps}
+        rows.append((f"backend/eval_int-{backend}", sec * 1e6, f"samples_per_sec={sps:.1f}"))
+
+    serial_s, serial_evals, _ = _time_dse(net, params, ds, population=0)
+    pop_s, pop_evals, pop_requested = _time_dse(net, params, ds, population=population)
+    serial_cps = serial_evals / serial_s
+    pop_cps = pop_evals / pop_s
+    speedup = pop_cps / serial_cps
+    wallclock_speedup = serial_s / pop_s  # identical anneal schedule both runs
+    report["dse"] = {
+        "serial": {"seconds": serial_s, "evaluations": serial_evals, "candidates_per_sec": serial_cps},
+        "population": {
+            "seconds": pop_s, "evaluations": pop_evals,
+            "requested_evaluations": pop_requested,
+            "candidates_per_sec": pop_cps, "population": population,
+        },
+        "population_speedup_candidates_per_sec": speedup,
+        "search_wallclock_speedup": wallclock_speedup,
+    }
+    rows.append((f"backend/dse-serial", serial_s * 1e6, f"cand_per_sec={serial_cps:.2f};evals={serial_evals}"))
+    rows.append((
+        f"backend/dse-population{population}", pop_s * 1e6,
+        f"cand_per_sec={pop_cps:.2f};evals={pop_evals}(requested={pop_requested})"
+        f";speedup={speedup:.2f}x;wallclock_speedup={wallclock_speedup:.2f}x",
+    ))
+
+    if not fast:
+        OUT.write_text(json.dumps(report, indent=2))
+    return rows

@@ -27,7 +27,7 @@ from repro.snn.train import train_snn
 OUT = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "fig11_dse.csv"
 
 
-def run(epochs: int = 5, T: int = 20) -> list[tuple[str, float, str]]:
+def run(epochs: int = 5, T: int = 20, backend: str = "reference", population: int = 0) -> list[tuple[str, float, str]]:
     t0 = time.time()
     ds = dvs_like(n=1200, T=T, seed=2)
     train, test = ds.split()
@@ -48,6 +48,8 @@ def run(epochs: int = 5, T: int = 20) -> list[tuple[str, float, str]]:
         space=SNNSearchSpace(ff_bits=(4, 8, 12, 16), rec_bits=(4, 8, 12, 16), leak_bits=(3, 8)),
         weights=weights,
         anneal_cfg=annealer_lib.AnnealConfig(t_start=1.0, t_min=0.02, alpha=0.6, eval_divisor=3, seed=0),
+        backend=backend,
+        population=population,
     )
     # figure data: every evaluated candidate, sorted by total cost
     rows = sorted(result.anneal.trace, key=lambda r: r["total"])

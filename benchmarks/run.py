@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   cg_error  -- section 4.1.2 CG approximation-error claims
   lm_dse    -- Flex-plorer generalised to LM serving precision (beyond paper)
   kernels   -- kernel micro-benchmarks (oracle timing + modeled TPU time)
+  backend   -- inference-backend throughput + DSE candidate rate
+               (reference vs fused, serial vs population; BENCH_backend.json)
   roofline  -- per (arch x shape) roofline terms from the dry-run records
 
 Usage: python -m benchmarks.run [--only table1,roofline] [--fast]
@@ -17,7 +19,7 @@ import argparse
 import sys
 import traceback
 
-MODULES = ["cg_error", "kernels", "roofline", "lm_dse", "table2", "table1", "fig11"]
+MODULES = ["cg_error", "kernels", "backend", "roofline", "lm_dse", "table2", "table1", "fig11"]
 
 
 def _rows(name: str, fast: bool):
@@ -45,6 +47,10 @@ def _rows(name: str, fast: bool):
         from benchmarks import kernels_micro
 
         return kernels_micro.run()
+    if name == "backend":
+        from benchmarks import backend_bench
+
+        return backend_bench.run(fast=fast)
     if name == "roofline":
         from benchmarks import roofline
 

@@ -1,0 +1,369 @@
+"""Pluggable inference backends for the Flexi-NeurA simulator.
+
+The simulator exposes one seam -- :class:`InferenceBackend` -- through which
+every consumer (training eval, the Flex-plorer DSE, serving, benchmarks)
+runs a network.  Two backends ship here:
+
+``reference``
+    The paper-faithful step-major simulation: one ``jax.lax.scan`` over time
+    steps, each step walking every core via ``int_layer_step`` /
+    ``float_layer_step``.  This is the numerics contract.
+
+``fused``
+    Layer-major traversal that wires the Pallas kernels into the simulator:
+    each eligible core's whole window runs as an exact int spike-weight
+    matmul (``repro.kernels.quant_matmul.spike_matmul``) feeding the fused
+    membrane scan (``repro.kernels.lif_scan``).  Bit-identical to
+    ``reference`` by construction (both reduce to ``int_layer_step``'s
+    arithmetic); the parity suite in ``tests/test_backend_parity.py`` holds
+    it to that.
+
+Fused-path coverage matrix (per layer; ineligible layers transparently run
+the reference step scan inside the fused traversal, so mixed networks work):
+
+    neuron     topology   reset              fused kernel path?
+    ---------  ---------  -----------------  ----------------------------
+    IF / LIF   FF         zero / subtract    yes (matmul + lif_scan)
+    IF / LIF   ATA_F/T    any                no  (recurrence couples steps)
+    SYNAPTIC   any        any                no  (second state register)
+
+Layer-major traversal is legal because inter-core traffic is strictly
+feed-forward and step-aligned (a spike emitted at step t is consumed by the
+next core at its step t); only *intra*-layer recurrence couples consecutive
+steps, and those layers stay on the step scan.
+
+Adding a backend: subclass :class:`InferenceBackend`, implement ``run_int``
+(and optionally ``run_float``), then ``register_backend("name", Factory)``.
+Everything above ``network.run_int`` selects backends by name, so new
+execution strategies (multi-core mapping, event-driven, remote) plug in
+without touching callers.
+
+This module also hosts the population-batched integer simulation used by
+the Flex-plorer's population DSE mode: a whole batch of precision
+candidates -- same static network structure, different quantized weights,
+thresholds and CG decay registers -- runs through one jitted, vmapped
+program (``run_int_population``), eliminating the per-candidate
+recompile-and-run that dominates serial DSE wall-clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.snn_layer import (
+    IntLayerParams,
+    ResetMode,
+    fused_eligible,
+    float_layer_init,
+    float_layer_step,
+    int_layer_init,
+    int_layer_step,
+    int_layer_step_dynamic,
+    int_layer_window,
+)
+from repro.kernels.lif_scan.lif_scan import lif_scan
+from repro.kernels.lif_scan.ref import lif_scan_ref
+from repro.kernels.quant_matmul.spike_matmul import spike_integrate
+
+__all__ = [
+    "SimRecord",
+    "InferenceBackend",
+    "ReferenceBackend",
+    "FusedBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "check_population_structure",
+    "stack_population",
+    "run_int_population",
+]
+
+
+@dataclasses.dataclass
+class SimRecord:
+    """Outputs of a full-window simulation.
+
+    spike_counts -- [batch, n_classes] output-layer spike totals (rate code)
+    layer_spikes -- list over layers of [T, batch] per-step spike totals
+                    (events emitted by that layer; feeds the latency model)
+    """
+
+    spike_counts: jax.Array
+    layer_spikes: list[jax.Array]
+
+    def predictions(self):
+        return jnp.argmax(self.spike_counts, axis=-1)
+
+
+def _run_step_major(net, params, spikes_in, init_fn, step_fn) -> SimRecord:
+    """Step-major simulation: scan over time, walk the cores inside."""
+    batch = spikes_in.shape[1]
+    states = [init_fn(cfg, batch) for cfg in net.layers]
+
+    def one_step(states, s_t):
+        new_states = []
+        x = s_t
+        emitted = []
+        for cfg, p, st in zip(net.layers, params, states):
+            st, x = step_fn(cfg, p, st, x)
+            new_states.append(st)
+            emitted.append(jnp.sum(x, axis=-1))  # events per sample this step
+        return new_states, (x, jnp.stack(emitted, axis=0))
+
+    states, (out_spikes, emitted) = jax.lax.scan(one_step, states, spikes_in)
+    counts = jnp.sum(out_spikes, axis=0)
+    layer_spikes = [emitted[:, i, :] for i in range(len(net.layers))]
+    return SimRecord(spike_counts=counts, layer_spikes=layer_spikes)
+
+
+class InferenceBackend:
+    """One execution strategy for a full-window network simulation."""
+
+    name = "base"
+
+    def run_int(self, net, qparams: Sequence[IntLayerParams], spikes_in) -> SimRecord:
+        raise NotImplementedError
+
+    def run_float(self, net, params, spikes_in, spike_fn) -> SimRecord:
+        raise NotImplementedError
+
+
+class ReferenceBackend(InferenceBackend):
+    """Step-major jnp semantics -- the numerics contract for every backend."""
+
+    name = "reference"
+
+    def run_int(self, net, qparams, spikes_in) -> SimRecord:
+        return _run_step_major(
+            net, list(qparams), spikes_in.astype(jnp.int32), int_layer_init, int_layer_step
+        )
+
+    def run_float(self, net, params, spikes_in, spike_fn) -> SimRecord:
+        def step(cfg, p, st, x):
+            return float_layer_step(cfg, p, st, x, spike_fn)
+
+        return _run_step_major(
+            net, list(params), spikes_in.astype(jnp.float32), float_layer_init, step
+        )
+
+
+class FusedBackend(InferenceBackend):
+    """Layer-major traversal through the fused integration + membrane kernels.
+
+    ``use_pallas`` selects the Pallas kernels (default: only on TPU; the
+    pure-jnp window oracle carries the identical numerics elsewhere, which
+    keeps CPU/GPU runs fast -- interpret-mode Pallas is a debugging tool,
+    not a fast path).  ``interpret`` forces interpreter execution of the
+    kernels off-TPU; the parity suite uses ``use_pallas=True,
+    interpret=True`` to hold the *actual kernels* to the bit-exact contract
+    on CPU.
+    """
+
+    name = "fused"
+
+    def __init__(
+        self,
+        use_pallas: bool | None = None,
+        interpret: bool | None = None,
+        block_b: int = 8,
+        block_n: int = 128,
+    ):
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.block_b = block_b
+        self.block_n = block_n
+
+    def _pallas_enabled(self) -> bool:
+        if self.use_pallas is None:
+            return jax.default_backend() == "tpu"
+        return self.use_pallas
+
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.interpret
+
+    def _fused_layer_window(self, cfg, p: IntLayerParams, raster):
+        """Whole-window spikes for one FF IF/LIF core via the kernel pair."""
+        use_pallas = self._pallas_enabled()
+        currents = spike_integrate(
+            raster, p.w_ff, use_pallas=use_pallas, interpret=self._interpret()
+        )
+        code = cfg.beta_code()
+        decay_k = 256 if code.bypass else code.k
+        reset_to_zero = cfg.reset == ResetMode.ZERO
+        try:
+            theta_q = int(p.theta_q)  # static for the Pallas kernel
+        except (
+            jax.errors.TracerIntegerConversionError,
+            jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError,
+        ):
+            theta_q = None  # traced weights (e.g. under vmap): oracle only
+        T, B, N = currents.shape
+        bb, bn = min(self.block_b, B), min(self.block_n, N)
+        if theta_q is None or not use_pallas or B % bb or N % bn:
+            theta = p.theta_q if theta_q is None else theta_q
+            spikes, _ = lif_scan_ref(currents, theta, decay_k, cfg.u_bits, reset_to_zero)
+            return spikes
+        spikes, _ = lif_scan(
+            currents,
+            theta_q=theta_q,
+            decay_k=decay_k,
+            u_bits=cfg.u_bits,
+            reset_to_zero=reset_to_zero,
+            block_b=bb,
+            block_n=bn,
+            interpret=self._interpret(),
+        )
+        return spikes
+
+    def run_int(self, net, qparams, spikes_in) -> SimRecord:
+        x = spikes_in.astype(jnp.int32)
+        emitted = []
+        for cfg, p in zip(net.layers, qparams):
+            if fused_eligible(cfg):
+                x = self._fused_layer_window(cfg, p, x)
+            else:
+                x = int_layer_window(cfg, p, x)
+            emitted.append(jnp.sum(x, axis=-1))  # [T, batch]
+        counts = jnp.sum(x, axis=0)
+        return SimRecord(spike_counts=counts, layer_spikes=emitted)
+
+    def run_float(self, net, params, spikes_in, spike_fn) -> SimRecord:
+        # The fused kernels are integer-only; float (training) simulation
+        # keeps the differentiable reference semantics.
+        return ReferenceBackend().run_float(net, params, spikes_in, spike_fn)
+
+
+_REGISTRY: dict[str, Callable[[], InferenceBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], InferenceBackend]) -> None:
+    """Register a backend factory under ``name`` (later wins, like a config)."""
+    _REGISTRY[name] = factory
+
+
+def get_backend(backend: str | InferenceBackend) -> InferenceBackend:
+    """Resolve a backend selector: a registered name or an instance."""
+    if isinstance(backend, InferenceBackend):
+        return backend
+    try:
+        return _REGISTRY[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown inference backend {backend!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register_backend("reference", ReferenceBackend)
+register_backend("fused", FusedBackend)
+
+
+# ---------------------------------------------------------------------------
+# Population-batched integer simulation (the Flex-plorer DSE hot path)
+# ---------------------------------------------------------------------------
+
+
+# Layer fields a population sweep may vary per candidate: they only reach the
+# traced program through quantized values / decay registers.  Everything else
+# is static (baked into the one compiled program) and must match the base net.
+_POPULATION_KNOBS = ("w_bits", "w_rec_bits", "leak_bits", "beta", "alpha")
+
+
+def check_population_structure(base, nets) -> None:
+    """Raise unless every candidate shares ``base``'s static structure."""
+    base_sig = [
+        {f.name: getattr(lc, f.name) for f in dataclasses.fields(lc) if f.name not in _POPULATION_KNOBS}
+        for lc in base.layers
+    ]
+    for net in nets:
+        if len(net.layers) != len(base.layers):
+            raise ValueError(
+                f"population candidate {net.name!r} has {len(net.layers)} layers, base has {len(base.layers)}"
+            )
+        for i, lc in enumerate(net.layers):
+            for name, want in base_sig[i].items():
+                got = getattr(lc, name)
+                if got != want:
+                    raise ValueError(
+                        f"population candidate {net.name!r} layer {i} differs from the "
+                        f"base net in static field {name!r} ({got!r} != {want!r}); only "
+                        f"{_POPULATION_KNOBS} may vary across a population sweep"
+                    )
+
+
+def stack_population(nets, qparams_list):
+    """Stack per-candidate quantized parameters for a vmapped evaluation.
+
+    ``nets`` are per-candidate :class:`NetworkConfig`s sharing one static
+    structure (layer count/shapes/neuron/topology/reset/register widths --
+    exactly what the DSE holds fixed while varying ``w_bits`` /
+    ``w_rec_bits`` / ``leak_bits``); ``qparams_list`` the matching
+    ``quantize_params`` outputs.  Returns ``(stacked_qparams, beta_regs,
+    alpha_regs)`` where each stacked leaf gains a leading candidate axis and
+    the decay registers are int32 ``[P, n_layers]`` packed DecayRate values.
+    """
+    n_layers = len(nets[0].layers)
+    stacked = [
+        IntLayerParams(
+            w_ff=jnp.stack([qp[l].w_ff for qp in qparams_list]),
+            w_rec=jnp.stack([qp[l].w_rec for qp in qparams_list]),
+            theta_q=jnp.stack([qp[l].theta_q for qp in qparams_list]),
+        )
+        for l in range(n_layers)
+    ]
+    beta_regs = jnp.asarray(
+        [[cfg.beta_code().decay_rate_register for cfg in net.layers] for net in nets],
+        jnp.int32,
+    )
+    alpha_regs = jnp.asarray(
+        [[cfg.alpha_code().decay_rate_register for cfg in net.layers] for net in nets],
+        jnp.int32,
+    )
+    return stacked, beta_regs, alpha_regs
+
+
+def _run_int_dynamic(net, qparams, beta_regs, alpha_regs, spikes_in):
+    """One candidate's bit-exact run with traced decay registers.
+
+    Numerically identical to ``ReferenceBackend.run_int`` (the dynamic step
+    gates the same shift taps arithmetically); exists so the decay registers
+    can differ across vmapped candidates.
+    """
+    batch = spikes_in.shape[1]
+    states = [int_layer_init(cfg, batch) for cfg in net.layers]
+
+    def one_step(states, s_t):
+        new_states = []
+        x = s_t
+        for i, (cfg, p, st) in enumerate(zip(net.layers, qparams, states)):
+            st, x = int_layer_step_dynamic(cfg, p, st, x, beta_regs[i], alpha_regs[i])
+            new_states.append(st)
+        return new_states, x
+
+    _, out_spikes = jax.lax.scan(one_step, states, spikes_in)
+    return jnp.sum(out_spikes, axis=0)  # [batch, n_classes]
+
+
+def run_int_population(net, stacked_qparams, beta_regs, alpha_regs, spikes_in):
+    """Score P precision candidates in one vmapped sweep.
+
+    ``spikes_in`` int [T, batch, n_in] is shared by all candidates (the DSE
+    evaluates every candidate on the same held-out batch).  Returns int32
+    spike counts [P, batch, n_classes].
+    """
+    spikes_in = spikes_in.astype(jnp.int32)
+
+    def one(qp, beta, alpha):
+        return _run_int_dynamic(net, qp, beta, alpha, spikes_in)
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(stacked_qparams, beta_regs, alpha_regs)

@@ -38,6 +38,7 @@ __all__ = [
     "encode_decay",
     "decode_factor",
     "apply_decay",
+    "apply_decay_traced",
     "apply_decay_float",
     "selection_units",
 ]
@@ -105,6 +106,25 @@ def apply_decay(x, code: DecayCode):
         if bit:
             acc = acc + arithmetic_rshift(x, shift)
     return acc
+
+
+def apply_decay_traced(x, decay_register):
+    """Bit-exact CG output with a *traced* DecayRate[8:0] register value.
+
+    Identical arithmetic to :func:`apply_decay`, but the packed 9-bit register
+    (``DecayCode.decay_rate_register``: bit 8 = bypass, bits 7..0 = k) is a
+    jax value rather than static python, so a whole population of decay codes
+    can run through one jitted/vmapped program -- the batched Flex-plorer DSE
+    path.  Every shift tap is computed and gated arithmetically, mirroring
+    the RTL's gated shift network with all SelectionUnits present.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    k = jnp.asarray(decay_register, jnp.int32)
+    acc = jnp.zeros_like(x)
+    for shift in range(1, 9):
+        gate = (k >> (8 - shift)) & 1
+        acc = acc + gate * arithmetic_rshift(x, shift)
+    return jnp.where(k >= 256, x, acc)
 
 
 def apply_decay_float(x, code: DecayCode):

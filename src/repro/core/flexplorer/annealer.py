@@ -28,7 +28,13 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
-__all__ = ["AnnealConfig", "AnnealResult", "enumerate_configs", "simulated_annealing"]
+__all__ = [
+    "AnnealConfig",
+    "AnnealResult",
+    "enumerate_configs",
+    "simulated_annealing",
+    "simulated_annealing_population",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +54,10 @@ class AnnealResult:
     evaluations: int
     trace: list[dict]  # every probed candidate: cfg, total/hw/acc cost
     cache: dict  # cfg -> (total, hw, acc_cost, accuracy)
+    # Of ``evaluations``, how many the search itself asked for (walker
+    # proposals / starts).  The population annealer additionally scores
+    # speculative lane-fill candidates; serial == evaluations.
+    requested_evaluations: int | None = None
 
 
 def enumerate_configs(knobs: Mapping[str, Sequence]) -> tuple[tuple[str, ...], list[tuple]]:
@@ -126,4 +136,104 @@ def simulated_annealing(
         evaluations=len(cache),
         trace=trace,
         cache=cache,
+        requested_evaluations=len(cache),
+    )
+
+
+def simulated_annealing_population(
+    knobs: Mapping[str, Sequence],
+    hw_cost_fn: Callable[[tuple], float],
+    batch_acc_fn: Callable[[list[tuple]], Sequence[float]],
+    acc_cost_fn: Callable[[float], float],
+    anneal: AnnealConfig = AnnealConfig(),
+    population: int = 8,
+) -> AnnealResult:
+    """Population-parallel annealing: propose/accept per population step.
+
+    ``population`` independent walkers each propose one neighbour per step;
+    all uncached proposals of the step are scored through a *single*
+    ``batch_acc_fn`` call (the explorer backs this with one jitted, vmapped
+    ``run_int`` sweep), then every walker accepts/rejects against its own
+    incumbent with the usual Metropolis rule.  The per-temperature proposal
+    budget *exactly* matches the serial annealer (``ceil(|cfgs| /
+    eval_divisor)`` proposals per temperature, split across walkers; a
+    partial final round uses only the first walkers), so the two modes run
+    the same search schedule -- population mode just amortises the
+    simulator's compile-and-run over whole proposal batches.
+
+    A width-P sweep costs the same no matter how many of its lanes carry
+    fresh candidates, so spare lanes are filled *speculatively* with
+    not-yet-scored configurations instead of padding: the cache warms at
+    full sweep width and late-temperature steps run entirely from cache.
+    (The paper's own annealer pre-computes every candidate's hardware cost
+    up front; this extends the same idea to the expensive accuracy term,
+    adaptively.)
+
+    Returns the same :class:`AnnealResult` shape as
+    :func:`simulated_annealing` (best incumbent across all walkers).
+    """
+    if population < 1:
+        raise ValueError(f"population must be >= 1, got {population}")
+    names, cfgs = enumerate_configs(knobs)
+    knob_values = [list(v) for v in knobs.values()]
+    rng = np.random.default_rng(anneal.seed)
+
+    hw_cache = {cfg: float(hw_cost_fn(cfg)) for cfg in cfgs}
+    cache: dict[tuple, tuple] = {}
+    trace: list[dict] = []
+    requested: set[tuple] = set()
+
+    def evaluate_batch(batch: Sequence[tuple]) -> None:
+        requested.update(batch)
+        fresh = [c for c in dict.fromkeys(batch) if c not in cache]
+        if not fresh:
+            return
+        if len(fresh) < population:
+            # speculative fill: score unseen candidates in the spare lanes
+            seen = cache.keys() | set(fresh)
+            pool = [c for c in cfgs if c not in seen]
+            order = rng.permutation(len(pool))[: population - len(fresh)]
+            fresh += [pool[i] for i in order]
+        accs = batch_acc_fn(fresh)
+        for cfg, accuracy in zip(fresh, accs):
+            accuracy = float(accuracy)
+            a_cost = float(acc_cost_fn(accuracy))
+            total = hw_cache[cfg] + a_cost
+            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy)
+            trace.append(
+                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy)
+            )
+
+    walkers = [cfgs[int(rng.integers(len(cfgs)))] for _ in range(population)]
+    evaluate_batch(walkers)
+    costs = [cache[w][0] for w in walkers]
+    best_i = int(np.argmin(costs))
+    best, best_cost = walkers[best_i], costs[best_i]
+
+    T = anneal.t_start
+    n_per_temp = max(1, math.ceil(len(cfgs) / anneal.eval_divisor))  # == serial
+    while T > anneal.t_min:
+        proposed = 0
+        while proposed < n_per_temp:
+            k = min(population, n_per_temp - proposed)
+            proposals = [_neighbor(walkers[i], knob_values, rng) for i in range(k)]
+            evaluate_batch(proposals)
+            for i, nbr in enumerate(proposals):
+                delta = cache[nbr][0] - costs[i]
+                if delta <= 0 or rng.random() <= math.exp(-delta / T):
+                    walkers[i], costs[i] = nbr, cache[nbr][0]
+                    if costs[i] < best_cost:
+                        best, best_cost = nbr, costs[i]
+            proposed += k
+        T *= anneal.alpha
+
+    total, hw, a_cost, accuracy = cache[best]
+    return AnnealResult(
+        best=best,
+        best_cost=best_cost,
+        best_breakdown=dict(zip(names, best)) | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy},
+        evaluations=len(cache),
+        trace=trace,
+        cache=cache,
+        requested_evaluations=len(requested),
     )

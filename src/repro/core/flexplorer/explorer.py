@@ -5,6 +5,18 @@ SNN mode (paper-faithful): given a *trained* network, anneal over
 candidate is quantized and scored by the bit-exact hardware simulator
 (``run_int``) on a held-out set, plus the analytical LUT/FF/BRAM model.
 
+Two hot-path knobs (both preserve the bit-exact scoring contract):
+
+* ``backend`` -- which simulator engine scores candidates (see
+  ``repro.core.backend``); the fused kernel path accelerates serial
+  evaluation on TPU.
+* ``population`` -- when > 1, the annealer proposes/accepts per population
+  step and every step's uncached candidates are quantized, stacked, and
+  scored through one jitted, vmapped ``run_int`` sweep
+  (``eval_int_population``) instead of one compile-and-run per candidate.
+  This is the DSE wall-clock lever: serial mode pays a fresh jit trace per
+  candidate configuration.
+
 The result carries everything the RTL Configurator stage would consume:
 the chosen design-time parameters, quantized weight tables, and the cost
 trace for the Fig.-11-style plot.
@@ -17,12 +29,13 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core import backend as backend_lib
 from repro.core import hw_model
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.flexplorer import cost as cost_lib
 from repro.core.network import NetworkConfig, quantize_params, run_int
 from repro.data.snn_datasets import SpikeDataset
-from repro.snn.train import eval_int
+from repro.snn.train import eval_int, eval_int_population
 
 __all__ = ["SNNSearchSpace", "ExplorationResult", "explore_snn"]
 
@@ -62,8 +75,27 @@ def explore_snn(
     device: cost_lib.DeviceCapacity = cost_lib.XC7Z020,
     anneal_cfg: annealer_lib.AnnealConfig = annealer_lib.AnnealConfig(),
     eval_batch: int = 512,
+    backend="reference",
+    population: int = 0,
 ) -> ExplorationResult:
-    """Anneal precision knobs for a trained SNN (the paper's Explorer stage)."""
+    """Anneal precision knobs for a trained SNN (the paper's Explorer stage).
+
+    ``backend`` selects the simulator engine for serial candidate scoring;
+    ``population > 1`` switches to population-mode DSE, which scores
+    candidates through its own vmapped dynamic-register sweep (still
+    bit-exact) and therefore *overrides* ``backend`` -- a warning is issued
+    if a non-default backend is requested alongside it.
+    """
+    is_default_backend = backend == "reference" or type(backend) is backend_lib.ReferenceBackend
+    if population and population > 1 and not is_default_backend:
+        import warnings
+
+        warnings.warn(
+            "explore_snn: population mode scores candidates through its own "
+            "vmapped reference-semantics sweep; backend="
+            f"{getattr(backend, 'name', backend)!r} is ignored",
+            stacklevel=2,
+        )
     any_recurrent = any(lc.is_recurrent for lc in net.layers)
     knobs = {"ff_bits": list(space.ff_bits)}
     if any_recurrent:
@@ -85,12 +117,35 @@ def explore_snn(
     def acc_fn(cfg: tuple) -> float:
         cand = cfg_to_net(cfg)
         qparams, _ = quantize_params(cand, float_params)
-        return eval_int(cand, qparams, eval_ds, batch_size=eval_batch)
+        return eval_int(cand, qparams, eval_ds, batch_size=eval_batch, backend=backend)
+
+    qp_cache: dict = {}
+
+    def quantized(cfg: tuple):
+        # Quantization is pure in (cfg, float_params); memoise so padding
+        # duplicates and re-proposed candidates cost nothing on the host.
+        if cfg not in qp_cache:
+            cand = cfg_to_net(cfg)
+            qp_cache[cfg] = (cand, quantize_params(cand, float_params)[0])
+        return qp_cache[cfg]
+
+    def batch_acc_fn(cfg_batch: list) -> np.ndarray:
+        # Pad to the fixed population width so the jitted vmapped program is
+        # compiled once and reused for every anneal step.
+        padded = list(cfg_batch) + [cfg_batch[-1]] * (population - len(cfg_batch))
+        nets, qps = zip(*(quantized(c) for c in padded))
+        accs = eval_int_population(net, list(nets), list(qps), eval_ds, batch_size=eval_batch)
+        return accs[: len(cfg_batch)]
 
     def acc_cost_fn(accuracy: float) -> float:
         return cost_lib.acc_cost(accuracy, weights)
 
-    result = annealer_lib.simulated_annealing(knobs, hw_cost_fn, acc_fn, acc_cost_fn, anneal_cfg)
+    if population and population > 1:
+        result = annealer_lib.simulated_annealing_population(
+            knobs, hw_cost_fn, batch_acc_fn, acc_cost_fn, anneal_cfg, population
+        )
+    else:
+        result = annealer_lib.simulated_annealing(knobs, hw_cost_fn, acc_fn, acc_cost_fn, anneal_cfg)
     best_net = cfg_to_net(result.best)
     best_qparams, _ = quantize_params(best_net, float_params)
     return ExplorationResult(best_net=best_net, best_qparams=best_qparams, anneal=result, weights=weights)

@@ -13,6 +13,12 @@ unrolled over time; this module provides
 
 plus per-layer spike statistics that feed the latency/energy model in
 ``repro.core.hw_model``.
+
+Both entry points take ``backend=`` -- a name registered with
+``repro.core.backend`` (``"reference"`` step-major jnp semantics, ``"fused"``
+layer-major Pallas kernel path) or an ``InferenceBackend`` instance.  Every
+backend is held bit-exact to ``reference`` on its supported configs by
+``tests/test_backend_parity.py``.
 """
 
 from __future__ import annotations
@@ -24,17 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import InferenceBackend, SimRecord, get_backend
 from repro.core.fixed_point import int_max
 from repro.core.snn_layer import (
     FloatLayerParams,
     IntLayerParams,
     LayerConfig,
-    LayerState,
     Topology,
-    float_layer_init,
-    float_layer_step,
-    int_layer_init,
-    int_layer_step,
 )
 
 __all__ = [
@@ -153,47 +155,14 @@ def quantize_params(
     return qparams, scales
 
 
-@dataclasses.dataclass
-class SimRecord:
-    """Outputs of a full-window simulation.
-
-    spike_counts -- [batch, n_classes] output-layer spike totals (rate code)
-    layer_spikes -- list over layers of [T, batch] per-step spike totals
-                    (events emitted by that layer; feeds the latency model)
-    """
-
-    spike_counts: jax.Array
-    layer_spikes: list[jax.Array]
-
-    def predictions(self):
-        return jnp.argmax(self.spike_counts, axis=-1)
-
-
-def _run(net, params, spikes_in, init_fn, step_fn):
-    batch = spikes_in.shape[1]
-    states = [init_fn(cfg, batch) for cfg in net.layers]
-
-    def one_step(states, s_t):
-        new_states = []
-        x = s_t
-        emitted = []
-        for cfg, p, st in zip(net.layers, params, states):
-            st, x = step_fn(cfg, p, st, x)
-            new_states.append(st)
-            emitted.append(jnp.sum(x, axis=-1))  # events per sample this step
-        return new_states, (x, jnp.stack(emitted, axis=0))
-
-    states, (out_spikes, emitted) = jax.lax.scan(one_step, states, spikes_in)
-    counts = jnp.sum(out_spikes, axis=0)
-    layer_spikes = [emitted[:, i, :] for i in range(len(net.layers))]
-    return SimRecord(spike_counts=counts, layer_spikes=layer_spikes)
-
-
 def run_int(
-    net: NetworkConfig, qparams: Sequence[IntLayerParams], spikes_in
+    net: NetworkConfig,
+    qparams: Sequence[IntLayerParams],
+    spikes_in,
+    backend: str | InferenceBackend = "reference",
 ) -> SimRecord:
     """Bit-exact deployment simulation. ``spikes_in``: int [T, batch, n_in]."""
-    return _run(net, list(qparams), spikes_in.astype(jnp.int32), int_layer_init, int_layer_step)
+    return get_backend(backend).run_int(net, list(qparams), spikes_in)
 
 
 def run_float(
@@ -201,10 +170,7 @@ def run_float(
     params: Sequence[FloatLayerParams],
     spikes_in,
     spike_fn,
+    backend: str | InferenceBackend = "reference",
 ) -> SimRecord:
     """Differentiable simulation. ``spikes_in``: float {0,1} [T, batch, n_in]."""
-
-    def step(cfg, p, st, x):
-        return float_layer_step(cfg, p, st, x, spike_fn)
-
-    return _run(net, list(params), spikes_in.astype(jnp.float32), float_layer_init, step)
+    return get_backend(backend).run_float(net, list(params), spikes_in, spike_fn)

@@ -51,6 +51,9 @@ __all__ = [
     "LayerState",
     "int_layer_init",
     "int_layer_step",
+    "int_layer_step_dynamic",
+    "int_layer_window",
+    "fused_eligible",
     "float_layer_init",
     "float_layer_step",
 ]
@@ -179,13 +182,13 @@ def _integrate_int(cfg: LayerConfig, params: IntLayerParams, state: LayerState, 
     return saturate(state.u + acc, cfg.u_bits), state.i_syn
 
 
-def int_layer_step(
-    cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in
-) -> tuple[LayerState, jax.Array]:
-    """One bit-exact hardware time step. Returns (new_state, spikes int32)."""
-    beta_code = cfg.beta_code()
-    u, i_syn = _integrate_int(cfg, params, state, s_in)
+def _int_phase_b(cfg: LayerConfig, params: IntLayerParams, u, i_syn, decay_u, decay_i):
+    """Phase B (leak / spike / reset), shared by the static and traced steps.
 
+    ``decay_u`` / ``decay_i`` are the CG applications -- the *only* place the
+    static-register and traced-register datapaths differ, so this is the
+    single copy of the spike/reset/leak numerics.
+    """
     if cfg.neuron == NeuronModel.SYNAPTIC:
         u_tmp = saturate(u + i_syn, cfg.u_bits)
     else:
@@ -196,15 +199,90 @@ def int_layer_step(
         u_reset = jnp.zeros_like(u_tmp)
     else:
         u_reset = saturate(u_tmp - params.theta_q, cfg.u_bits)
-    u_leak = saturate(coeff_gen.apply_decay(u_tmp, beta_code), cfg.u_bits)
+    u_leak = saturate(decay_u(u_tmp), cfg.u_bits)
     u_new = jnp.where(spk == 1, u_reset, u_leak)
 
     if cfg.neuron == NeuronModel.SYNAPTIC:
-        i_new = saturate(coeff_gen.apply_decay(i_syn, cfg.alpha_code()), cfg.i_bits)
+        i_new = saturate(decay_i(i_syn), cfg.i_bits)
     else:
         i_new = i_syn
 
     return LayerState(u=u_new, i_syn=i_new, prev_spk=spk), spk
+
+
+def int_layer_step(
+    cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in
+) -> tuple[LayerState, jax.Array]:
+    """One bit-exact hardware time step. Returns (new_state, spikes int32)."""
+    beta_code = cfg.beta_code()
+    u, i_syn = _integrate_int(cfg, params, state, s_in)
+    return _int_phase_b(
+        cfg,
+        params,
+        u,
+        i_syn,
+        lambda x: coeff_gen.apply_decay(x, beta_code),
+        lambda x: coeff_gen.apply_decay(x, cfg.alpha_code()),
+    )
+
+
+def int_layer_step_dynamic(
+    cfg: LayerConfig,
+    params: IntLayerParams,
+    state: LayerState,
+    s_in,
+    beta_register,
+    alpha_register,
+) -> tuple[LayerState, jax.Array]:
+    """Bit-exact step with *traced* DecayRate registers (population DSE path).
+
+    Identical numerics to :func:`int_layer_step`, but the CG registers are jax
+    values, so a vmap over candidates (whose ``leak_bits`` differ) compiles to
+    one program.  ``beta_register`` / ``alpha_register`` are packed 9-bit
+    ``DecayCode.decay_rate_register`` values.
+    """
+    u, i_syn = _integrate_int(cfg, params, state, s_in)
+    return _int_phase_b(
+        cfg,
+        params,
+        u,
+        i_syn,
+        lambda x: coeff_gen.apply_decay_traced(x, beta_register),
+        lambda x: coeff_gen.apply_decay_traced(x, alpha_register),
+    )
+
+
+def fused_eligible(cfg: LayerConfig) -> bool:
+    """True when a layer's window can run through the fused kernel path.
+
+    The fused path (int spike-weight matmul feeding the ``lif_scan`` Pallas
+    kernel) covers the IF/LIF datapath with either reset mode on purely
+    feed-forward cores.  Recurrent topologies (the next step's input depends
+    on this step's spikes) and the Synaptic model (a second state register)
+    stay on the step-major reference semantics.
+    """
+    return cfg.topology == Topology.FF and cfg.neuron in (
+        NeuronModel.IF,
+        NeuronModel.LIF,
+    )
+
+
+def int_layer_window(cfg: LayerConfig, params: IntLayerParams, raster) -> jax.Array:
+    """Run one layer over a whole window. ``raster``: int [T, batch, n_in].
+
+    Returns the output spike raster int32 [T, batch, n_out].  This is the
+    layer-major traversal used by backends that process the network
+    core-by-core instead of step-by-step; numerics are exactly
+    ``int_layer_step`` iterated over the window.
+    """
+    state0 = int_layer_init(cfg, raster.shape[1])
+
+    def step(state, s_t):
+        state, spk = int_layer_step(cfg, params, state, s_t)
+        return state, spk
+
+    _, spikes = jax.lax.scan(step, state0, raster.astype(jnp.int32))
+    return spikes
 
 
 def _integrate_float(cfg: LayerConfig, params: FloatLayerParams, state: LayerState, s_in):

@@ -1,0 +1,51 @@
+"""Version-compatibility shims for jax distributed APIs.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+top level, and its replication-checking kwarg was renamed along the way
+(``check_rep`` -> ``check_vma``, when varying-axis tracking landed).
+``jax.lax.pcast`` only exists on jax versions with varying-axis tracking.
+Everything in the distributed substrate goes through this module so the
+rest of the code is written against the *new* API surface and runs on
+both.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # newer jax: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+__all__ = ["shard_map", "pcast_varying"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg name normalised.
+
+    Callers pass ``check_vma`` (the current name); on older jax it is
+    forwarded as ``check_rep`` (same meaning: verify the claimed
+    replication/varying axes of outputs).
+    """
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = check_vma
+    else:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def pcast_varying(x, axis_name: str):
+    """Mark ``x`` as varying over ``axis_name`` where the tracker exists.
+
+    On jax versions without varying-axis tracking this is the identity --
+    those versions don't type-check loop carries against manual-axis
+    variance, so no cast is needed.
+    """
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, (axis_name,), to="varying")
+    return x

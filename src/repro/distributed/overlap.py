@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.compat import pcast_varying, shard_map
+
 __all__ = ["ring_allgather_matmul", "ring_allgather_matmul_shardmap"]
 
 
@@ -56,7 +58,7 @@ def ring_allgather_matmul(x_local, w_shard, axis_name: str):
     acc0 = jnp.zeros((x_local.shape[0], w_shard.shape[1]), x_local.dtype)
     # partial sums vary per ring rank mid-loop; mark the carry as varying so
     # the fori_loop types agree under shard_map's varying-axis tracking
-    acc0 = jax.lax.pcast(acc0, (axis_name,), to="varying")
+    acc0 = pcast_varying(acc0, axis_name)
     _, out = jax.lax.fori_loop(0, g, body, (w_shard, acc0))
     return out
 
@@ -68,7 +70,7 @@ def ring_allgather_matmul_shardmap(mesh: Mesh, axis_name: str = "model"):
     """
 
     def fn(x, w):
-        out = jax.shard_map(
+        out = shard_map(
             functools.partial(ring_allgather_matmul, axis_name=axis_name),
             mesh=mesh,
             in_specs=(P(), P(axis_name, None)),

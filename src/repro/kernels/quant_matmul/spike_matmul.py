@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: exact int32 spike x quantized-weight matmul.
+
+The spike-integration phase of a Flexi-NeurA core is a {0,1}-activation
+matmul against the quantized weight table -- integer in, integer out, with
+*exact* integer accumulation (the membrane register adds weight columns; no
+float rounding is allowed if the simulator is to stay bit-faithful).  The
+bf16-activation ``quant_matmul`` kernel next door trades exactness for MXU
+throughput and is the right tool for the LM stack; this kernel is its
+bit-exact sibling for the SNN fast path.
+
+Tiling mirrors ``quant_matmul``: grid (M/bm, N/bn, K/bk) with an int32
+accumulator tile in VMEM scratch across the K loop (K innermost, so each
+(i, j) output tile sees its partials in order).  Accumulation headroom:
+spikes are {0,1} and |w| < 2**15, so a K=256 reduction stays below 2**23 --
+no overflow at any supported core size (n_in <= 256, w_bits <= 16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, w_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]  # int32 [bm, bk] spike block
+    w = w_ref[...]  # int32 [bk, bn] weight block
+    acc_ref[...] += jax.lax.dot_general(
+        s, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def spike_matmul(
+    s,  # int32 [M, K] spike raster (rows = flattened time x batch)
+    w_q,  # int32 [K, N] quantized weights
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+):
+    """Exact int32 ``s @ w_q``. Shapes must tile by (bm, bk, bn)."""
+    M, K = s.shape
+    N = w_q.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"({M},{K},{N}) must tile by ({bm},{bk},{bn})")
+    k_steps = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(s, w_q)
+
+
+def spike_integrate(
+    spikes,  # int [T, B, K] input spike raster
+    w_q,  # int32 [K, N] quantized weights
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+):
+    """Window-level integration currents [T, B, N] = spikes @ w_q (exact).
+
+    Routes through the Pallas kernel when requested and the flattened
+    (T*B, K, N) problem tiles cleanly; otherwise the XLA int einsum computes
+    the identical result (integer matmul is exact either way -- the fallback
+    is about shape coverage, not numerics).
+    """
+    T, B, K = spikes.shape
+    N = w_q.shape[1]
+    s2 = spikes.astype(jnp.int32).reshape(T * B, K)
+    M = T * B
+    if use_pallas and not (M % min(bm, M) or N % min(bn, N) or K % min(bk, K)):
+        out = spike_matmul(s2, w_q.astype(jnp.int32), bm=bm, bn=bn, bk=bk, interpret=interpret)
+    else:
+        out = jnp.einsum("mk,kn->mn", s2, w_q.astype(jnp.int32))
+    return out.reshape(T, B, N)

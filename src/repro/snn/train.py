@@ -9,6 +9,7 @@ parameters to the Explorer for precision DSE, exactly as the paper's flow
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Sequence
 
@@ -16,12 +17,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_lib
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_float, run_int
 from repro.data.snn_datasets import SpikeDataset
 from repro.snn.surrogate import fast_sigmoid
 from repro.train import optimizer as opt_lib
 
-__all__ = ["TrainResult", "train_snn", "eval_float", "eval_int", "spike_count_loss"]
+__all__ = [
+    "TrainResult",
+    "train_snn",
+    "eval_float",
+    "eval_int",
+    "eval_int_population",
+    "spike_count_loss",
+]
 
 
 def spike_count_loss(counts, labels, rate_reg: float = 1e-4, total_spikes=None):
@@ -109,12 +118,19 @@ def train_snn(
     return TrainResult(params=params, history=history, net=net)
 
 
-def eval_float(net, params, ds: SpikeDataset, surrogate_slope: float = 25.0, batch_size: int = 256) -> float:
+def eval_float(
+    net,
+    params,
+    ds: SpikeDataset,
+    surrogate_slope: float = 25.0,
+    batch_size: int = 256,
+    backend="reference",
+) -> float:
     spike_fn = fast_sigmoid(surrogate_slope)
 
     @jax.jit
     def fwd(params, spikes):
-        return run_float(net, params, spikes, spike_fn).predictions()
+        return run_float(net, params, spikes, spike_fn, backend=backend).predictions()
 
     correct = total = 0
     for spikes, labels in ds.batches(batch_size):
@@ -124,16 +140,26 @@ def eval_float(net, params, ds: SpikeDataset, surrogate_slope: float = 25.0, bat
     return correct / max(1, total)
 
 
-def eval_int(net, qparams, ds: SpikeDataset, batch_size: int = 256, return_stats: bool = False):
+def eval_int(
+    net,
+    qparams,
+    ds: SpikeDataset,
+    batch_size: int = 256,
+    return_stats: bool = False,
+    backend="reference",
+):
     """Bit-exact hardware-faithful accuracy (the DSE's accuracy evaluator).
 
     With ``return_stats``, also returns per-layer mean events per step and
-    input events per step -- the latency/energy model inputs.
+    input events per step -- the latency/energy model inputs.  ``backend``
+    selects the simulation engine (see ``repro.core.backend``); every
+    registered backend is bit-exact on its supported configs, so the choice
+    is a speed knob, not an accuracy knob.
     """
 
     @jax.jit
     def fwd(spikes):
-        rec = run_int(net, qparams, spikes)
+        rec = run_int(net, qparams, spikes, backend=backend)
         return rec.predictions(), [jnp.mean(s, axis=1) for s in rec.layer_spikes]
 
     correct = total = 0
@@ -156,3 +182,45 @@ def eval_int(net, qparams, ds: SpikeDataset, batch_size: int = 256, return_stats
     layer_ev = [e / n_batches for e in layer_ev]
     in_ev = in_ev / n_batches
     return acc, {"input_events_per_step": in_ev, "layer_events_per_step": layer_ev}
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _population_fwd(net, stacked_qparams, beta_regs, alpha_regs, spikes):
+    counts = backend_lib.run_int_population(
+        net, stacked_qparams, beta_regs, alpha_regs, spikes
+    )
+    return jnp.argmax(counts, axis=-1)  # [P, batch]
+
+
+def eval_int_population(
+    net,
+    candidate_nets: Sequence[NetworkConfig],
+    qparams_list: Sequence[list],
+    ds: SpikeDataset,
+    batch_size: int = 256,
+) -> np.ndarray:
+    """Bit-exact accuracies for a population of precision candidates at once.
+
+    All candidates share ``net``'s static structure (the DSE varies only
+    quantized values and CG decay registers), so one jitted, vmapped program
+    scores the whole population per data batch -- and, because the jit is
+    module-level with the parameters passed as (stacked) arguments rather
+    than closed over, successive populations of the same size reuse the
+    compiled program.  This is what makes population-mode DSE fast: the
+    serial path pays one trace+compile per candidate.
+
+    Returns a float accuracy per candidate, identical to calling
+    :func:`eval_int` per candidate (asserted by the parity suite).
+    """
+    backend_lib.check_population_structure(net, candidate_nets)
+    stacked, beta_regs, alpha_regs = backend_lib.stack_population(
+        candidate_nets, qparams_list
+    )
+    P = len(candidate_nets)
+    correct = np.zeros(P, np.int64)
+    total = 0
+    for spikes, labels in ds.batches(batch_size):
+        preds = np.asarray(_population_fwd(net, stacked, beta_regs, alpha_regs, jnp.asarray(spikes)))
+        correct += (preds == labels[None, :]).sum(axis=1)
+        total += len(labels)
+    return correct / max(1, total)

@@ -1,0 +1,49 @@
+"""Coefficient Generator property tests (hypothesis-driven sweeps).
+
+The always-on example-based CG tests live in ``test_coeff_gen.py``; this
+module holds the randomized sweeps and self-skips without hypothesis.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coeff_gen
+from repro.core.coeff_gen import apply_decay, encode_decay, quantization_grid
+
+
+@given(beta=st.floats(0.0, 1.0), leak_bits=st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_factor_error_below_half_grid(beta, leak_bits):
+    """Rounding to the CG grid keeps the factor error <= half a grid step;
+    at 8 taps that is the paper's 'worst-case rounding error below 1/512'."""
+    code = encode_decay(beta, leak_bits)
+    step = (1 << (8 - leak_bits)) / 256.0
+    assert abs(code.factor - beta) <= step / 2 + 1e-12
+
+
+@given(
+    k=st.integers(0, 255),
+    xs=st.lists(st.integers(-(2**20), 2**20), min_size=1, max_size=32),
+)
+@settings(max_examples=200, deadline=None)
+def test_shift_add_matches_factor_within_tap_count(k, xs):
+    """|shift-add(x) - x*k/256| < popcount(k) (one truncated LSB per tap)."""
+    code = coeff_gen.DecayCode(k=k, bypass=False, leak_bits=8)
+    x = jnp.asarray(xs, jnp.int32)
+    got = np.asarray(apply_decay(x, code), np.int64)
+    exact = np.asarray(xs, np.float64) * (k / 256.0)
+    bound = bin(k).count("1") + 1e-9
+    assert np.all(np.abs(got - exact) <= bound)
+
+
+@given(leak_bits=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_grid_is_reachable(leak_bits):
+    grid = quantization_grid(leak_bits)
+    for f in grid:
+        code = encode_decay(float(f), leak_bits)
+        assert code.factor == pytest.approx(float(f), abs=1e-12)

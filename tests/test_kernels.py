@@ -1,12 +1,15 @@
-"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Randomized hypothesis sweeps live in ``test_kernels_props.py`` so these
+parametrized cases run even without hypothesis installed.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.precision import pack_int4, quantize_weight, unpack_int4
+from repro.core.precision import quantize_weight
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.lif_scan.lif_scan import lif_scan
@@ -62,29 +65,17 @@ def test_quant_matmul_matches_oracle(bits, M, K, N, dtype):
     qt = quantize_weight(w, bits)
     ref = quant_matmul_ref(x, qt)
     out = quant_matmul(x, qt.q, qt.scale, bits=bits, interpret=True, out_dtype=dtype)
+    # Kernel and oracle accumulate in f32 but in different K orders; a
+    # near-tie can land a couple of output ulps apart after the final cast,
+    # so allow 2 ulp of bf16 (ulp/x <= 2**-8, worst at the bottom of a
+    # binade) on top of the f32 accumulation noise floor.
+    bf16 = dtype == jnp.bfloat16
     np.testing.assert_allclose(
-        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=0, atol=1e-5
+        np.asarray(out, np.float32),
+        np.asarray(ref, np.float32),
+        rtol=2**-7 if bf16 else 0,
+        atol=1e-5,
     )
-
-
-@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64).filter(lambda l: len(l) % 2 == 0))
-@settings(max_examples=100, deadline=None)
-def test_int4_pack_roundtrip(values):
-    v = jnp.asarray(values, jnp.int8).reshape(1, -1)
-    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(v))), np.asarray(v))
-
-
-@given(bits=st.integers(4, 8), seed=st.integers(0, 1000))
-@settings(max_examples=30, deadline=None)
-def test_quantize_weight_error_bound(bits, seed):
-    """Per-column quantization error <= scale/2 (round-to-nearest)."""
-    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 16), jnp.float32)
-    qt = quantize_weight(w, bits)
-    from repro.core.precision import dequantize_weight
-
-    back = np.asarray(dequantize_weight(qt, jnp.float32))
-    err = np.abs(back - np.asarray(w))
-    assert np.all(err <= np.asarray(qt.scale)[None, :] * 0.5 + 1e-7)
 
 
 # ---------------------------------------------------------------------------

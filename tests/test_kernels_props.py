@@ -1,0 +1,35 @@
+"""Kernel-adjacent property tests (hypothesis-driven sweeps).
+
+The always-on parametrized kernel-vs-oracle sweeps live in
+``test_kernels.py``; this module self-skips without hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import pack_int4, quantize_weight, unpack_int4
+
+
+@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64).filter(lambda l: len(l) % 2 == 0))
+@settings(max_examples=100, deadline=None)
+def test_int4_pack_roundtrip(values):
+    v = jnp.asarray(values, jnp.int8).reshape(1, -1)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(v))), np.asarray(v))
+
+
+@given(bits=st.integers(4, 8), seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_quantize_weight_error_bound(bits, seed):
+    """Per-column quantization error <= scale/2 (round-to-nearest)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 16), jnp.float32)
+    qt = quantize_weight(w, bits)
+    from repro.core.precision import dequantize_weight
+
+    back = np.asarray(dequantize_weight(qt, jnp.float32))
+    err = np.abs(back - np.asarray(w))
+    assert np.all(err <= np.asarray(qt.scale)[None, :] * 0.5 + 1e-7)

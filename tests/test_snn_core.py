@@ -1,85 +1,16 @@
-"""SNN core: the vectorised bit-exact simulator vs the strict per-event
-reference (the hardware contract), plus hw-model anchors."""
-
-import dataclasses
+"""SNN core always-on anchors: AER packet codec, hw-model Table-2 anchors,
+and the quantized end-to-end run.  The vectorised-vs-event-driven property
+sweep lives in ``test_snn_core_props.py`` (needs hypothesis)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import hw_model
-from repro.core.events import EventDrivenCore, PacketKind, decode_packet, encode_packet, raster_to_packets
+from repro.core.events import PacketKind, decode_packet, encode_packet, raster_to_packets
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
-from repro.core.snn_layer import (
-    IntLayerParams,
-    LayerConfig,
-    NeuronModel,
-    ResetMode,
-    Topology,
-    int_layer_init,
-    int_layer_step,
-)
-
-NEURONS = [NeuronModel.IF, NeuronModel.LIF, NeuronModel.SYNAPTIC]
-TOPOS = [Topology.FF, Topology.ATA_F, Topology.ATA_T]
-
-
-@st.composite
-def layer_case(draw):
-    cfg = LayerConfig(
-        n_in=draw(st.integers(2, 12)),
-        n_out=draw(st.integers(2, 10)),
-        neuron=draw(st.sampled_from(NEURONS)),
-        topology=draw(st.sampled_from(TOPOS)),
-        reset=draw(st.sampled_from([ResetMode.ZERO, ResetMode.SUBTRACT])),
-        w_bits=draw(st.integers(3, 8)),
-        u_bits=16,
-        i_bits=16,
-        leak_bits=draw(st.integers(2, 8)),
-        beta=draw(st.floats(0.3, 0.99)),
-        alpha=draw(st.floats(0.3, 0.99)),
-        threshold=1.0,
-    )
-    T = draw(st.integers(2, 8))
-    seed = draw(st.integers(0, 2**31 - 1))
-    return cfg, T, seed
-
-
-@given(layer_case())
-@settings(max_examples=40, deadline=None)
-def test_vectorised_matches_event_driven_reference(case):
-    """int_layer_step (TPU path) == EventDrivenCore (per-event RTL model)."""
-    cfg, T, seed = case
-    rng = np.random.default_rng(seed)
-    w_ff = rng.integers(-20, 21, (cfg.n_in, cfg.n_out))
-    if cfg.topology == Topology.ATA_T:
-        w_rec = rng.integers(-10, 11, (cfg.n_out, cfg.n_out))
-    elif cfg.topology == Topology.ATA_F:
-        w_rec = np.asarray(rng.integers(-10, 11))
-    else:
-        w_rec = np.zeros((0,), np.int64)
-    theta = 40
-    raster = (rng.random((T, cfg.n_in)) < 0.3).astype(np.int64)
-
-    core = EventDrivenCore(cfg, w_ff, w_rec, theta)
-    ref_spikes = np.zeros((T, cfg.n_out), np.int64)
-    for t in range(T):
-        fired = core.step(list(np.nonzero(raster[t])[0]), last=(t == T - 1))
-        ref_spikes[t, fired] = 1
-
-    params = IntLayerParams(
-        w_ff=jnp.asarray(w_ff, jnp.int32),
-        w_rec=jnp.asarray(w_rec, jnp.int32),
-        theta_q=jnp.asarray(theta, jnp.int32),
-    )
-    state = int_layer_init(cfg, batch=1)
-    got = np.zeros_like(ref_spikes)
-    for t in range(T):
-        state, spk = int_layer_step(cfg, params, state, jnp.asarray(raster[None, t]))
-        got[t] = np.asarray(spk[0])
-    np.testing.assert_array_equal(got, ref_spikes)
+from repro.core.snn_layer import LayerConfig
 
 
 def test_packet_roundtrip():

@@ -108,8 +108,9 @@ def test_compressed_psum_exact_mean_under_shared_scale():
     """With a pmax-agreed scale, dequantised mean error <= scale/2."""
     devs = jax.devices()
     from jax.sharding import Mesh
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
 
     mesh = Mesh(np.asarray(devs[:1]), ("pod",))
     g = {"w": jnp.asarray([[0.3, -0.2, 0.05, 0.0]])}
