@@ -13,8 +13,10 @@ Two measurements on the paper's MNIST-scale 256-128-10 LIF network:
 
 Emits ``BENCH_backend.json`` at the repo root for the perf trajectory
 (full-size runs only -- ``--fast`` smoke passes measure a reduced workload
-and must not clobber the trajectory artifact) and returns the harness's
-``(name, us_per_call, derived)`` rows.
+and must not clobber the trajectory artifact; they write
+``experiments/BENCH_backend_fast.json`` instead, which is what CI uploads
+as *that run's* measurement) and returns the harness's ``(name,
+us_per_call, derived)`` rows.
 """
 
 from __future__ import annotations
@@ -33,7 +35,9 @@ from repro.core.network import NetworkConfig, init_float_params, quantize_params
 from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
 
-OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_backend.json"
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = _ROOT / "BENCH_backend.json"
+FAST_OUT = _ROOT / "experiments" / "BENCH_backend_fast.json"
 
 ANNEAL = annealer_lib.AnnealConfig(t_start=1.0, t_min=5e-3, alpha=0.6, eval_divisor=2, seed=0)
 SPACE = SNNSearchSpace(ff_bits=(4, 5, 6, 8, 12, 16), leak_bits=(2, 3, 4, 8))
@@ -134,6 +138,7 @@ def run(fast: bool = False, population: int = 8):
         f";speedup={speedup:.2f}x;wallclock_speedup={wallclock_speedup:.2f}x",
     ))
 
-    if not fast:
-        OUT.write_text(json.dumps(report, indent=2))
+    out = FAST_OUT if fast else OUT
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
     return rows

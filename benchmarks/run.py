@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   kernels   -- kernel micro-benchmarks (oracle timing + modeled TPU time)
   backend   -- inference-backend throughput + DSE candidate rate
                (reference vs fused, serial vs population; BENCH_backend.json)
+  event     -- event-driven backend throughput vs input sparsity
+               (reference vs fused vs event; BENCH_event.json)
   roofline  -- per (arch x shape) roofline terms from the dry-run records
 
 Usage: python -m benchmarks.run [--only table1,roofline] [--fast]
@@ -19,7 +21,7 @@ import argparse
 import sys
 import traceback
 
-MODULES = ["cg_error", "kernels", "backend", "roofline", "lm_dse", "table2", "table1", "fig11"]
+MODULES = ["cg_error", "kernels", "backend", "event", "roofline", "lm_dse", "table2", "table1", "fig11"]
 
 
 def _rows(name: str, fast: bool):
@@ -51,6 +53,10 @@ def _rows(name: str, fast: bool):
         from benchmarks import backend_bench
 
         return backend_bench.run(fast=fast)
+    if name == "event":
+        from benchmarks import event_bench
+
+        return event_bench.run(fast=fast)
     if name == "roofline":
         from benchmarks import roofline
 

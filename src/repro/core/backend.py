@@ -2,7 +2,7 @@
 
 The simulator exposes one seam -- :class:`InferenceBackend` -- through which
 every consumer (training eval, the Flex-plorer DSE, serving, benchmarks)
-runs a network.  Two backends ship here:
+runs a network.  Three backends ship here:
 
 ``reference``
     The paper-faithful step-major simulation: one ``jax.lax.scan`` over time
@@ -18,6 +18,18 @@ runs a network.  Two backends ship here:
     arithmetic); the parity suite in ``tests/test_backend_parity.py`` holds
     it to that.
 
+``event``
+    Layer-major *event-driven* traversal: per layer, only the active
+    pre-synaptic rows are gathered and summed (a masked-gather / segment-sum
+    over a static event budget sized from the measured spike raster), so
+    integration work scales with spike counts, not dense layer size --
+    the execution model that underpins the paper's latency/energy story.
+    Bit-exact to ``reference`` on every config (int32 accumulation is
+    order-independent and the step dynamics are shared); transparently falls
+    back to the dense window when a layer's traffic is too dense for the
+    gather to win, and to ``reference`` when invoked under an outer
+    ``jax.jit`` (no concrete spike counts to size the event budget from).
+
 Fused-path coverage matrix (per layer; ineligible layers transparently run
 the reference step scan inside the fused traversal, so mixed networks work):
 
@@ -26,6 +38,11 @@ the reference step scan inside the fused traversal, so mixed networks work):
     IF / LIF   FF         zero / subtract    yes (matmul + lif_scan)
     IF / LIF   ATA_F/T    any                no  (recurrence couples steps)
     SYNAPTIC   any        any                no  (second state register)
+
+The event path instead covers *every* row of that matrix sparsely: the
+sparse gather computes only the feed-forward accumulation, and the shared
+step scan (``int_layer_window_from_currents``) layers recurrent integration
+and phase B on top, so recurrent and Synaptic cores stay on the sparse path.
 
 Layer-major traversal is legal because inter-core traffic is strictly
 feed-forward and step-aligned (a spike emitted at step t is consumed by the
@@ -36,7 +53,10 @@ Adding a backend: subclass :class:`InferenceBackend`, implement ``run_int``
 (and optionally ``run_float``), then ``register_backend("name", Factory)``.
 Everything above ``network.run_int`` selects backends by name, so new
 execution strategies (multi-core mapping, event-driven, remote) plug in
-without touching callers.
+without touching callers.  A backend that sizes buffers from concrete data
+(like ``event``) sets ``jit_compatible = False``; callers that would wrap
+``run_int`` in their own ``jax.jit`` (e.g. ``eval_int``) then let the
+backend manage compilation itself.
 
 This module also hosts the population-batched integer simulation used by
 the Flex-plorer's population DSE mode: a whole batch of precision
@@ -49,10 +69,12 @@ recompile-and-run that dominates serial DSE wall-clock.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.snn_layer import (
     IntLayerParams,
@@ -64,6 +86,7 @@ from repro.core.snn_layer import (
     int_layer_step,
     int_layer_step_dynamic,
     int_layer_window,
+    int_layer_window_from_currents,
 )
 from repro.kernels.lif_scan.lif_scan import lif_scan
 from repro.kernels.lif_scan.ref import lif_scan_ref
@@ -74,6 +97,7 @@ __all__ = [
     "InferenceBackend",
     "ReferenceBackend",
     "FusedBackend",
+    "EventBackend",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -89,14 +113,48 @@ class SimRecord:
 
     spike_counts -- [batch, n_classes] output-layer spike totals (rate code)
     layer_spikes -- list over layers of [T, batch] per-step spike totals
-                    (events emitted by that layer; feeds the latency model)
+                    (ASPL events *emitted* by that layer; layer l's entry is
+                    what layer l+1 integrates at its step t)
+    input_events -- [T, batch] per-step ASPL counts into layer 0 (the input
+                    raster's active channels; what core 0 integrates)
+
+    Every backend populates all three fields, so any record can drive the
+    event-count-calibrated latency/energy model in ``repro.core.hw_model``
+    (see ``EventTraffic.from_record``).
     """
 
     spike_counts: jax.Array
     layer_spikes: list[jax.Array]
+    input_events: jax.Array | None = None
 
     def predictions(self):
         return jnp.argmax(self.spike_counts, axis=-1)
+
+    def event_stats(self) -> dict:
+        """Batch-mean event traffic: the latency/energy model's inputs.
+
+        Returns ``{"input_events_per_step": [T], "layer_events_per_step":
+        list over layers of [T]}`` as numpy arrays (mean over the batch) --
+        the same shape ``eval_int(..., return_stats=True)`` aggregates over
+        a whole dataset.
+        """
+        if self.input_events is None:
+            raise ValueError("record carries no input_events (legacy record?)")
+        return {
+            "input_events_per_step": np.asarray(jnp.mean(self.input_events, axis=1)),
+            "layer_events_per_step": [
+                np.asarray(jnp.mean(s, axis=1)) for s in self.layer_spikes
+            ],
+        }
+
+    def total_events_per_image(self) -> float:
+        """Mean events per sample over the whole window (input + emitted)."""
+        if self.input_events is None:
+            raise ValueError("record carries no input_events (legacy record?)")
+        total = jnp.sum(jnp.mean(self.input_events, axis=1))
+        for s in self.layer_spikes:
+            total = total + jnp.sum(jnp.mean(s, axis=1))
+        return float(total)
 
 
 def _run_step_major(net, params, spikes_in, init_fn, step_fn) -> SimRecord:
@@ -117,13 +175,21 @@ def _run_step_major(net, params, spikes_in, init_fn, step_fn) -> SimRecord:
     states, (out_spikes, emitted) = jax.lax.scan(one_step, states, spikes_in)
     counts = jnp.sum(out_spikes, axis=0)
     layer_spikes = [emitted[:, i, :] for i in range(len(net.layers))]
-    return SimRecord(spike_counts=counts, layer_spikes=layer_spikes)
+    input_events = jnp.sum(spikes_in != 0, axis=-1)
+    return SimRecord(
+        spike_counts=counts, layer_spikes=layer_spikes, input_events=input_events
+    )
 
 
 class InferenceBackend:
     """One execution strategy for a full-window network simulation."""
 
     name = "base"
+    #: True when ``run_int`` may be traced under a caller's ``jax.jit``.
+    #: Backends that size buffers from concrete data (event-driven) set this
+    #: False and manage jit compilation internally; callers like ``eval_int``
+    #: check it before wrapping.
+    jit_compatible = True
 
     def run_int(self, net, qparams: Sequence[IntLayerParams], spikes_in) -> SimRecord:
         raise NotImplementedError
@@ -224,6 +290,7 @@ class FusedBackend(InferenceBackend):
 
     def run_int(self, net, qparams, spikes_in) -> SimRecord:
         x = spikes_in.astype(jnp.int32)
+        input_events = jnp.sum(x != 0, axis=-1)
         emitted = []
         for cfg, p in zip(net.layers, qparams):
             if fused_eligible(cfg):
@@ -232,11 +299,228 @@ class FusedBackend(InferenceBackend):
                 x = int_layer_window(cfg, p, x)
             emitted.append(jnp.sum(x, axis=-1))  # [T, batch]
         counts = jnp.sum(x, axis=0)
-        return SimRecord(spike_counts=counts, layer_spikes=emitted)
+        return SimRecord(
+            spike_counts=counts, layer_spikes=emitted, input_events=input_events
+        )
 
     def run_float(self, net, params, spikes_in, spike_fn) -> SimRecord:
         # The fused kernels are integer-only; float (training) simulation
         # keeps the differentiable reference semantics.
+        return ReferenceBackend().run_float(net, params, spikes_in, spike_fn)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven backend: work scales with spike counts, not dense layer size
+# ---------------------------------------------------------------------------
+
+try:  # the host CSR strategy wants scipy's C sparse kernels; optional
+    import scipy.sparse as _scipy_sparse
+except ImportError:  # pragma: no cover - scipy ships with jax, but stay safe
+    _scipy_sparse = None
+
+
+def _round_capacity(k: int, multiple: int = 16) -> int:
+    """Round an event budget up to a lane-aligned multiple (bounds the
+    number of distinct compiled programs and keeps the gather shapes
+    vector-unit/Pallas friendly)."""
+    return max(multiple, ((k + multiple - 1) // multiple) * multiple)
+
+
+def _gather_currents(raster, w_ff, k_active: int):
+    """Sparse FF integration: sum only the active pre-synaptic weight rows.
+
+    ``raster`` int32 [T, B, n_in]; ``k_active`` is a static per-window event
+    budget >= the max active-channel count of any (t, b).  ``top_k`` on the
+    spike vector compacts the active source addresses to the front (the
+    returned values double as the per-lane spike values, so over-budget
+    lanes contribute exact zeros), then the masked gather-and-sum computes
+    ``s_t @ w_ff`` touching k_active rows instead of n_in.  int32 addition
+    is order-independent, so the result is bit-identical to the dense
+    einsum for any sufficient budget.
+    """
+    T, B, n_in = raster.shape
+    flat = raster.reshape(T * B, n_in).astype(jnp.int32)
+    vals, idx = jax.lax.top_k(flat, k_active)  # per-lane values: 0 = padding
+    rows = w_ff[idx]  # [T*B, k_active, n_out] gather of active rows
+    currents = jnp.einsum("ek,eko->eo", vals, rows.astype(jnp.int32))
+    return currents.reshape(T, B, -1)
+
+
+def _csr_currents(
+    raster: np.ndarray,
+    w_ff: np.ndarray,
+    active: np.ndarray,
+    row_counts: np.ndarray,
+) -> np.ndarray:
+    """Host-side sparse FF integration through scipy's C CSR kernel.
+
+    ``np.flatnonzero`` on the (caller-precomputed) activity mask *is* the
+    CSR column structure (row-major order) and the per-row event counts
+    *are* the indptr, so assembly is one C pass plus O(nnz) address
+    arithmetic; the CSR x dense product then costs O(nnz * n_out) -- true
+    event-count-proportional work.  Exact int32, same wraparound semantics
+    as the dense einsum.
+    """
+    T, B, n_in = raster.shape
+    rows = T * B
+    nz = np.flatnonzero(active)
+    c = (nz % n_in).astype(np.int32)
+    data = np.ascontiguousarray(raster).reshape(-1)[nz].astype(np.int32, copy=False)
+    indptr = np.zeros(rows + 1, np.int64)
+    np.cumsum(row_counts.reshape(-1), out=indptr[1:])
+    mat = _scipy_sparse.csr_matrix((data, c, indptr), shape=(rows, n_in))
+    currents = np.asarray(mat @ w_ff.astype(np.int32, copy=False), np.int32)
+    return currents.reshape(T, B, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k_active"))
+def _event_layer_window(cfg, params: IntLayerParams, raster, k_active: int):
+    currents = _gather_currents(raster, params.w_ff, k_active)
+    return int_layer_window_from_currents(cfg, params, currents)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _phase_b_window(cfg, params: IntLayerParams, currents):
+    return int_layer_window_from_currents(cfg, params, currents)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dense_layer_window(cfg, params: IntLayerParams, raster):
+    """Density fallback: whole-window flat dense integration (one einsum
+    over [T*B, n_in], the fused backend's shape) feeding the same step scan
+    -- so even the fallback beats the step-major reference on wall-clock."""
+    currents = spike_integrate(raster, params.w_ff, use_pallas=False)
+    return int_layer_window_from_currents(cfg, params, currents)
+
+
+class EventBackend(InferenceBackend):
+    """Event-driven layer-major traversal: integrate active rows, skip silence.
+
+    Per layer, only the active pre-synaptic rows contribute to the window's
+    feed-forward integration; the shared step scan
+    (``int_layer_window_from_currents``) then applies recurrent integration
+    and phase B.  Work and memory traffic scale with spike counts -- the
+    same contract the hardware's AER pipeline (and the latency model in
+    ``hw_model``) obeys.  Two sparse strategies carry identical numerics:
+
+    ``"gather"``
+        The jnp masked-gather formulation: ``top_k`` compacts active source
+        addresses into a static event budget sized from the *measured* max
+        per-step event count (lane-rounded, see ``_round_capacity``), then a
+        masked gather-and-sum touches budget rows instead of n_in.  Fully
+        jit-compiled; the shape XLA:TPU / a Pallas kernel wants.
+
+    ``"csr"``
+        Host-side CSR x dense product through scipy's C kernel: O(nnz *
+        n_out) work.  On CPU, XLA's gather/scatter lower to code that loses
+        to its own dense matmul even at 5% density, so this is the strategy
+        that actually realises the event-driven win there (the benchmark in
+        ``benchmarks/event_bench.py`` holds it to that).
+
+    ``"auto"`` (default) picks ``gather`` on TPU and ``csr`` elsewhere when
+    scipy is available.
+
+    Bit-exact to ``reference`` on every neuron model x topology x reset mode
+    (asserted by the parity suite): both strategies compute the identical
+    int32 feed-forward sum -- int32 addition is order-independent, and
+    saturation only applies after the full step's accumulation -- and the
+    dynamics reuse the reference step numerics.  Two transparent fallbacks
+    keep the contract without a perf cliff:
+
+    * density: a layer whose event budget exceeds ``dense_threshold * n_in``
+      runs the dense window instead (sparse indirection loses to the dense
+      matmul well below 100% density);
+    * tracing: under an outer ``jax.jit`` there are no concrete spike counts
+      to size budgets from, so the whole run delegates to ``reference``
+      (callers that honor ``jit_compatible = False`` never hit this).
+    """
+
+    name = "event"
+    jit_compatible = False
+
+    def __init__(
+        self,
+        strategy: str = "auto",
+        dense_threshold: float = 0.34,
+        capacity_multiple: int = 16,
+    ):
+        if strategy not in ("auto", "gather", "csr"):
+            raise ValueError(f"unknown event strategy {strategy!r}")
+        if strategy == "csr" and _scipy_sparse is None:
+            raise ValueError("event strategy 'csr' needs scipy installed")
+        if not 0.0 < dense_threshold <= 1.0:
+            raise ValueError(f"dense_threshold must be in (0, 1], got {dense_threshold}")
+        if not isinstance(capacity_multiple, int) or capacity_multiple < 1:
+            raise ValueError(f"capacity_multiple must be a positive int, got {capacity_multiple}")
+        self.strategy = strategy
+        self.dense_threshold = dense_threshold
+        self.capacity_multiple = capacity_multiple
+
+    def resolved_strategy(self) -> str:
+        if self.strategy != "auto":
+            return self.strategy
+        if jax.default_backend() == "tpu" or _scipy_sparse is None:
+            return "gather"
+        return "csr"
+
+    def _budget(self, x_counts_max: int, cfg) -> int:
+        return min(cfg.n_in, _round_capacity(x_counts_max, self.capacity_multiple))
+
+    def run_int(self, net, qparams, spikes_in) -> SimRecord:
+        x = jnp.asarray(spikes_in)
+        if isinstance(x, jax.core.Tracer):
+            return ReferenceBackend().run_int(net, qparams, spikes_in)
+        x = x.astype(jnp.int32)
+        if self.resolved_strategy() == "csr":
+            return self._run_int_csr(net, qparams, np.asarray(x))
+        input_events = jnp.sum(x != 0, axis=-1)
+        emitted = []
+        for cfg, p in zip(net.layers, qparams):
+            k_max = int(jnp.max(jnp.sum(x != 0, axis=-1)))  # concrete: host value
+            k = self._budget(k_max, cfg)
+            if k > self.dense_threshold * cfg.n_in:
+                x = _dense_layer_window(cfg, p, x)
+            else:
+                x = _event_layer_window(cfg, p, x, k)
+            emitted.append(jnp.sum(x, axis=-1))  # [T, batch]
+        counts = jnp.sum(x, axis=0)
+        return SimRecord(
+            spike_counts=counts, layer_spikes=emitted, input_events=input_events
+        )
+
+    def _run_int_csr(self, net, qparams, x: np.ndarray) -> SimRecord:
+        """Host-driven traversal: numpy event bookkeeping, scipy CSR
+        integration, jitted phase-B scans.  On the CPU jax backend the
+        host/device handoffs are zero-copy, so the only real work is the
+        activity pass (the AER encoder's job), the O(nnz * n_out) sparse
+        product, and the phase-B scan."""
+        active = x != 0  # [T, batch, n_in] byte mask, reused by the CSR build
+        counts = active.sum(axis=-1)  # [T, batch]
+        input_events = counts
+        emitted = []
+        for cfg, p in zip(net.layers, qparams):
+            k = self._budget(int(counts.max(initial=0)), cfg)
+            if k > self.dense_threshold * cfg.n_in:
+                x = np.asarray(_dense_layer_window(cfg, p, jnp.asarray(x)))
+                active = x != 0
+                counts = active.sum(axis=-1)
+            else:
+                currents = _csr_currents(x, np.asarray(p.w_ff), active, counts)
+                x = np.asarray(_phase_b_window(cfg, p, jnp.asarray(currents)))
+                # phase B emits {0,1}: the spike raster is its own mask and
+                # its sum doubles as the next layer's event count
+                active = x
+                counts = x.sum(axis=-1)
+            emitted.append(counts)
+        return SimRecord(
+            spike_counts=jnp.asarray(x.sum(axis=0)),
+            layer_spikes=[jnp.asarray(e) for e in emitted],
+            input_events=jnp.asarray(input_events),
+        )
+
+    def run_float(self, net, params, spikes_in, spike_fn) -> SimRecord:
+        # Float (training) simulation keeps the differentiable reference
+        # semantics; sparsity games don't pay off under surrogate gradients.
         return ReferenceBackend().run_float(net, params, spikes_in, spike_fn)
 
 
@@ -266,6 +550,7 @@ def available_backends() -> list[str]:
 
 register_backend("reference", ReferenceBackend)
 register_backend("fused", FusedBackend)
+register_backend("event", EventBackend)
 
 
 # ---------------------------------------------------------------------------
@@ -337,7 +622,9 @@ def _run_int_dynamic(net, qparams, beta_regs, alpha_regs, spikes_in):
 
     Numerically identical to ``ReferenceBackend.run_int`` (the dynamic step
     gates the same shift taps arithmetically); exists so the decay registers
-    can differ across vmapped candidates.
+    can differ across vmapped candidates.  Returns ``(spike_counts [batch,
+    n_classes], emitted [T, n_layers, batch])`` -- the emitted per-step event
+    totals feed the event-aware DSE cost model.
     """
     batch = spikes_in.shape[1]
     states = [int_layer_init(cfg, batch) for cfg in net.layers]
@@ -345,25 +632,37 @@ def _run_int_dynamic(net, qparams, beta_regs, alpha_regs, spikes_in):
     def one_step(states, s_t):
         new_states = []
         x = s_t
+        emitted = []
         for i, (cfg, p, st) in enumerate(zip(net.layers, qparams, states)):
             st, x = int_layer_step_dynamic(cfg, p, st, x, beta_regs[i], alpha_regs[i])
             new_states.append(st)
-        return new_states, x
+            emitted.append(jnp.sum(x, axis=-1))
+        return new_states, (x, jnp.stack(emitted, axis=0))
 
-    _, out_spikes = jax.lax.scan(one_step, states, spikes_in)
-    return jnp.sum(out_spikes, axis=0)  # [batch, n_classes]
+    _, (out_spikes, emitted) = jax.lax.scan(one_step, states, spikes_in)
+    return jnp.sum(out_spikes, axis=0), emitted  # [batch, n_classes], [T, L, batch]
 
 
-def run_int_population(net, stacked_qparams, beta_regs, alpha_regs, spikes_in):
+def run_int_population(
+    net, stacked_qparams, beta_regs, alpha_regs, spikes_in, return_events: bool = False
+):
     """Score P precision candidates in one vmapped sweep.
 
     ``spikes_in`` int [T, batch, n_in] is shared by all candidates (the DSE
     evaluates every candidate on the same held-out batch).  Returns int32
-    spike counts [P, batch, n_classes].
+    spike counts [P, batch, n_classes]; with ``return_events``, also the
+    per-candidate emitted event totals [P, T, n_layers, batch] (each
+    candidate quantizes differently, so its event traffic -- and therefore
+    its modeled latency/energy -- differs too).
     """
     spikes_in = spikes_in.astype(jnp.int32)
 
     def one(qp, beta, alpha):
         return _run_int_dynamic(net, qp, beta, alpha, spikes_in)
 
-    return jax.vmap(one, in_axes=(0, 0, 0))(stacked_qparams, beta_regs, alpha_regs)
+    counts, emitted = jax.vmap(one, in_axes=(0, 0, 0))(
+        stacked_qparams, beta_regs, alpha_regs
+    )
+    if return_events:
+        return counts, emitted
+    return counts

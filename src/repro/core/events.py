@@ -1,25 +1,38 @@
 """AER event packets and the strict event-driven reference simulator.
 
-Packet formats (paper section 4):
+Packet formats (paper section 4).  The paper does not pin the exact
+control-payload encodings, so the concrete words below are *this repo's*
+contract -- they are asserted verbatim by ``test_snn_core.py::
+test_packet_words_pinned``, so this docstring and the codec cannot drift
+apart without a test failure:
 
-* ASPL -- Address of Spike in Previous Layer, 9 bits: control bit (MSB) = 0,
-  8-bit source-neuron address.
-* ASCL -- Address of Spike in Current Layer, 8 bits (recurrent only).
-* EOTS -- End Of Time Step, 9 bits: control bit = 1, payload 0.
-* EOIN -- End Of INput, 9 bits: control bit = 1, payload 1; triggers the lazy
-  reset that zeroes neuron state for the next sample.
+* ASPL -- Address of Spike in Previous Layer, 9 bits:
+  ``{control=0, addr[7:0]}``; the word *is* the address
+  (``encode_packet(ASPL, 0xAB) == 0x0AB``).
+* ASCL -- Address of Spike in Current Layer, 8 bits: the bare address
+  (``0xAB``).  The recurrent path has its own FIFO, so no control bit is
+  needed; ``decode_packet(word, recurrent_path=True)`` disambiguates.
+* EOTS -- End Of Time Step: control word ``0x100`` (control=1, payload 0).
+* EOIN -- End Of INput:   control word ``0x101`` (control=1, payload 1).
 
-The exact control-payload encodings are not pinned down by the paper; the
-choices here (documented, stable) are what the packet codecs and the
-multi-core stream tests use.
+EOIN lazy-reset semantics (asserted by ``test_snn_core.py::
+test_eoin_lazy_reset_zeroes_state_after_spike_generation``): the EOIN step
+is processed *normally* -- integration, leak, threshold compare and spike
+emission all happen -- but during the leak/spike sweep the state writeback
+is replaced by zeros (``U <- 0``, ``I_syn <- 0``).  Spikes of the final
+step are therefore real outputs, while the next sample starts from virgin
+state without spending a separate reset sweep.
 
 :class:`EventDrivenCore` is a deliberately scalar, per-event Python/NumPy
 model of one core: events are integrated one at a time with *per-event
 saturation*, in arrival order, exactly as the RTL's FF-Integ/REC-Integ
 microstates do.  It exists to pin the vectorised ``int_layer_step`` to the
-hardware contract: property tests assert both produce identical trajectories
-whenever no intermediate accumulation saturates (and the strict model is the
-ground truth when one does).
+hardware contract: property tests (``test_snn_core_props.py``) assert both
+produce identical trajectories whenever no intermediate accumulation
+saturates (and the strict model is the ground truth when one does).  Its
+``cycle_count`` (one cycle per swept neuron visit) is the same accounting
+rule the analytic latency model in ``repro.core.hw_model.step_cycles``
+vectorises.
 """
 
 from __future__ import annotations
@@ -145,7 +158,12 @@ class EventDrivenCore:
             self._integrate_one(src, int(self.w_rec))
 
     def leak_spike_phase(self, lazy_reset: bool = False) -> list[int]:
-        """Sequential neuron sweep; returns addresses of spiking neurons."""
+        """Sequential neuron sweep; returns addresses of spiking neurons.
+
+        With ``lazy_reset`` (the EOIN step) the sweep computes spikes
+        normally but writes zeros back instead of the decayed/reset state --
+        see the module docstring for the pinned semantics.
+        """
         fired = []
         for n in range(self.cfg.n_out):
             if self.cfg.neuron == NeuronModel.SYNAPTIC:

@@ -52,8 +52,8 @@ class AnnealResult:
     best_cost: float
     best_breakdown: dict
     evaluations: int
-    trace: list[dict]  # every probed candidate: cfg, total/hw/acc cost
-    cache: dict  # cfg -> (total, hw, acc_cost, accuracy)
+    trace: list[dict]  # every probed candidate: cfg, total/hw/acc/perf cost
+    cache: dict  # cfg -> (total, hw, acc_cost, accuracy, perf_cost)
     # Of ``evaluations``, how many the search itself asked for (walker
     # proposals / starts).  The population annealer additionally scores
     # speculative lane-fill candidates; serial == evaluations.
@@ -90,7 +90,12 @@ def simulated_annealing(
     acc_fn: Callable[[tuple], float],
     acc_cost_fn: Callable[[float], float],
     anneal: AnnealConfig = AnnealConfig(),
+    extra_cost_fn: Callable[[tuple], float] | None = None,
 ) -> AnnealResult:
+    """``extra_cost_fn`` (optional) adds a per-candidate cost term evaluated
+    *after* ``acc_fn`` for the same candidate -- the explorer uses it for the
+    event-aware latency/energy cost, which reuses the simulation traffic the
+    accuracy evaluation just measured."""
     names, cfgs = enumerate_configs(knobs)
     knob_values = [list(v) for v in knobs.values()]
     rng = np.random.default_rng(anneal.seed)
@@ -104,10 +109,11 @@ def simulated_annealing(
         if cfg not in cache:
             accuracy = float(acc_fn(cfg))
             a_cost = float(acc_cost_fn(accuracy))
-            total = hw_cache[cfg] + a_cost
-            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy)
+            p_cost = float(extra_cost_fn(cfg)) if extra_cost_fn is not None else 0.0
+            total = hw_cache[cfg] + a_cost + p_cost
+            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy, p_cost)
             trace.append(
-                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy)
+                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy, perf_cost=p_cost)
             )
         return cache[cfg][0]
 
@@ -128,11 +134,12 @@ def simulated_annealing(
                     best, best_cost = cur, cur_cost
         T *= anneal.alpha
 
-    total, hw, a_cost, accuracy = cache[best]
+    total, hw, a_cost, accuracy, p_cost = cache[best]
     return AnnealResult(
         best=best,
         best_cost=best_cost,
-        best_breakdown=dict(zip(names, best)) | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy},
+        best_breakdown=dict(zip(names, best))
+        | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy, "perf_cost": p_cost},
         evaluations=len(cache),
         trace=trace,
         cache=cache,
@@ -147,6 +154,7 @@ def simulated_annealing_population(
     acc_cost_fn: Callable[[float], float],
     anneal: AnnealConfig = AnnealConfig(),
     population: int = 8,
+    extra_cost_fn: Callable[[tuple], float] | None = None,
 ) -> AnnealResult:
     """Population-parallel annealing: propose/accept per population step.
 
@@ -198,10 +206,11 @@ def simulated_annealing_population(
         for cfg, accuracy in zip(fresh, accs):
             accuracy = float(accuracy)
             a_cost = float(acc_cost_fn(accuracy))
-            total = hw_cache[cfg] + a_cost
-            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy)
+            p_cost = float(extra_cost_fn(cfg)) if extra_cost_fn is not None else 0.0
+            total = hw_cache[cfg] + a_cost + p_cost
+            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy, p_cost)
             trace.append(
-                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy)
+                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy, perf_cost=p_cost)
             )
 
     walkers = [cfgs[int(rng.integers(len(cfgs)))] for _ in range(population)]
@@ -227,11 +236,12 @@ def simulated_annealing_population(
             proposed += k
         T *= anneal.alpha
 
-    total, hw, a_cost, accuracy = cache[best]
+    total, hw, a_cost, accuracy, p_cost = cache[best]
     return AnnealResult(
         best=best,
         best_cost=best_cost,
-        best_breakdown=dict(zip(names, best)) | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy},
+        best_breakdown=dict(zip(names, best))
+        | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy, "perf_cost": p_cost},
         evaluations=len(cache),
         trace=trace,
         cache=cache,

@@ -1,12 +1,20 @@
-"""Flex-plorer cost functions (paper Eqs. 4-7).
+"""Flex-plorer cost functions (paper Eqs. 4-7, plus an event-aware perf term).
 
     HwCost    = C_H * (C_LUT*LUT_n + C_FF*FF_n + C_BRAM*BRAM_n)
     AccCost   = C_A * (1 - hardware_aware_accuracy)
-    TotalCost = HwCost + AccCost        with C_H + C_A = 1, C_LUT+C_FF+C_BRAM = 1
+    PerfCost  = C_P * (C_LAT*lat/lat_target + C_E*energy/energy_target)
+    TotalCost = HwCost + AccCost + PerfCost    with C_H + C_A + C_P = 1,
+                C_LUT + C_FF + C_BRAM = 1,  C_LAT + C_E = 1
 
 Resource terms are normalised by the target device capacity (default: the
-paper's Xilinx Zynq-7000 XC7Z020).  The same weighted-sum structure is reused
-at LM scale with roofline terms standing in for LUT/FF/BRAM (see
+paper's Xilinx Zynq-7000 XC7Z020).  The perf term normalises *measured*
+event-driven latency/energy (``hw_model.design_point`` at the candidate's
+simulated traffic) against a target budget (default: the paper's MNIST
+design point, 1.1 ms / 0.12 mJ) -- this is what lets the annealer trade
+precision for realistic event-dependent latency instead of worst-case
+dense cycles.  ``C_P`` defaults to 0, which recovers the paper's exact
+two-term objective.  The same weighted-sum structure is reused at LM scale
+with roofline terms standing in for LUT/FF/BRAM (see
 ``repro.core.flexplorer.explorer.LMCandidateEvaluator``).
 """
 
@@ -16,7 +24,16 @@ import dataclasses
 
 from repro.core.hw_model import CoreResources
 
-__all__ = ["DeviceCapacity", "XC7Z020", "CostWeights", "hw_cost", "acc_cost", "total_cost"]
+__all__ = [
+    "DeviceCapacity",
+    "XC7Z020",
+    "CostWeights",
+    "PerfTargets",
+    "hw_cost",
+    "acc_cost",
+    "perf_cost",
+    "total_cost",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,18 +48,35 @@ XC7Z020 = DeviceCapacity(luts=53_200, ffs=106_400, brams=140, name="XC7Z020")
 
 
 @dataclasses.dataclass(frozen=True)
+class PerfTargets:
+    """Latency/energy budgets the perf cost normalises against.
+
+    Defaults are the paper's MNIST design point, so a perf cost of
+    ``C_P`` means "exactly on the paper's published operating figures".
+    """
+
+    latency_s: float = 1.1e-3
+    energy_j: float = 0.12e-3
+
+
+@dataclasses.dataclass(frozen=True)
 class CostWeights:
     c_hw: float = 0.5
     c_acc: float = 0.5
+    c_perf: float = 0.0
     c_lut: float = 0.33
     c_ff: float = 0.33
     c_bram: float = 0.34
+    c_lat: float = 0.5
+    c_energy: float = 0.5
 
     def __post_init__(self):
-        if abs(self.c_hw + self.c_acc - 1.0) > 1e-9:
-            raise ValueError("C_H + C_A must equal 1 (paper Eq. 7)")
+        if abs(self.c_hw + self.c_acc + self.c_perf - 1.0) > 1e-9:
+            raise ValueError("C_H + C_A + C_P must equal 1 (paper Eq. 7; C_P = 0 there)")
         if abs(self.c_lut + self.c_ff + self.c_bram - 1.0) > 1e-9:
             raise ValueError("C_LUT + C_FF + C_BRAM must equal 1 (paper Eq. 7)")
+        if abs(self.c_lat + self.c_energy - 1.0) > 1e-9:
+            raise ValueError("C_LAT + C_E must equal 1")
 
 
 def hw_cost(res: CoreResources, w: CostWeights, dev: DeviceCapacity = XC7Z020) -> float:
@@ -56,5 +90,34 @@ def acc_cost(hardware_aware_accuracy: float, w: CostWeights) -> float:
     return w.c_acc * (1.0 - hardware_aware_accuracy)
 
 
-def total_cost(res: CoreResources, accuracy: float, w: CostWeights, dev: DeviceCapacity = XC7Z020) -> float:
-    return hw_cost(res, w, dev) + acc_cost(accuracy, w)
+def perf_cost(
+    latency_s: float,
+    energy_j: float,
+    w: CostWeights,
+    targets: PerfTargets = PerfTargets(),
+) -> float:
+    """Event-aware performance cost: measured latency/energy vs budget."""
+    lat_n = latency_s / targets.latency_s
+    e_n = energy_j / targets.energy_j
+    return w.c_perf * (w.c_lat * lat_n + w.c_energy * e_n)
+
+
+def total_cost(
+    res: CoreResources,
+    accuracy: float,
+    w: CostWeights,
+    dev: DeviceCapacity = XC7Z020,
+    latency_s: float | None = None,
+    energy_j: float | None = None,
+    targets: PerfTargets = PerfTargets(),
+) -> float:
+    total = hw_cost(res, w, dev) + acc_cost(accuracy, w)
+    if w.c_perf:
+        if latency_s is None or energy_j is None:
+            raise ValueError(
+                "total_cost: weights have c_perf > 0, so latency_s and "
+                "energy_j are required (omitting them would silently drop "
+                "the perf term and change the objective's scale)"
+            )
+        total += perf_cost(latency_s, energy_j, w, targets)
+    return total

@@ -77,6 +77,7 @@ def explore_snn(
     eval_batch: int = 512,
     backend="reference",
     population: int = 0,
+    perf_targets: cost_lib.PerfTargets = cost_lib.PerfTargets(),
 ) -> ExplorationResult:
     """Anneal precision knobs for a trained SNN (the paper's Explorer stage).
 
@@ -85,6 +86,14 @@ def explore_snn(
     candidates through its own vmapped dynamic-register sweep (still
     bit-exact) and therefore *overrides* ``backend`` -- a warning is issued
     if a non-default backend is requested alongside it.
+
+    When ``weights.c_perf > 0`` the objective gains an event-aware perf
+    term: each candidate's simulated event traffic (measured during the same
+    accuracy evaluation -- no extra simulation) drives the calibrated
+    latency/energy model, normalised against ``perf_targets`` (default: the
+    paper's 1.1 ms / 0.12 mJ MNIST design point).  Lower precision changes
+    spiking behaviour and therefore event counts, so the annealer sees
+    realistic event-dependent latency, not worst-case dense cycles.
     """
     is_default_backend = backend == "reference" or type(backend) is backend_lib.ReferenceBackend
     if population and population > 1 and not is_default_backend:
@@ -96,6 +105,7 @@ def explore_snn(
             f"{getattr(backend, 'name', backend)!r} is ignored",
             stacklevel=2,
         )
+    use_perf = weights.c_perf > 0
     any_recurrent = any(lc.is_recurrent for lc in net.layers)
     knobs = {"ff_bits": list(space.ff_bits)}
     if any_recurrent:
@@ -114,9 +124,20 @@ def explore_snn(
         res = hw_model.network_resources(cfg_to_net(cfg))
         return cost_lib.hw_cost(res, weights, device)
 
+    # cfg -> event-traffic stats dict, filled by whichever accuracy evaluator
+    # ran the candidate (the perf cost reuses that simulation's traffic).
+    stats_stash: dict = {}
+
     def acc_fn(cfg: tuple) -> float:
         cand = cfg_to_net(cfg)
         qparams, _ = quantize_params(cand, float_params)
+        if use_perf:
+            acc, stats = eval_int(
+                cand, qparams, eval_ds, batch_size=eval_batch,
+                return_stats=True, backend=backend,
+            )
+            stats_stash[cfg] = stats
+            return acc
         return eval_int(cand, qparams, eval_ds, batch_size=eval_batch, backend=backend)
 
     qp_cache: dict = {}
@@ -134,18 +155,37 @@ def explore_snn(
         # compiled once and reused for every anneal step.
         padded = list(cfg_batch) + [cfg_batch[-1]] * (population - len(cfg_batch))
         nets, qps = zip(*(quantized(c) for c in padded))
-        accs = eval_int_population(net, list(nets), list(qps), eval_ds, batch_size=eval_batch)
+        if use_perf:
+            accs, stats = eval_int_population(
+                net, list(nets), list(qps), eval_ds, batch_size=eval_batch,
+                return_stats=True,
+            )
+            for c, s in zip(padded, stats):
+                stats_stash[c] = s
+        else:
+            accs = eval_int_population(net, list(nets), list(qps), eval_ds, batch_size=eval_batch)
         return accs[: len(cfg_batch)]
 
     def acc_cost_fn(accuracy: float) -> float:
         return cost_lib.acc_cost(accuracy, weights)
 
+    def perf_cost_fn(cfg: tuple) -> float:
+        traffic = hw_model.EventTraffic.from_stats(stats_stash[cfg])
+        dp = hw_model.design_point(cfg_to_net(cfg), traffic)
+        return cost_lib.perf_cost(dp.latency_s, dp.energy_per_image_j, weights, perf_targets)
+
+    extra_cost_fn = perf_cost_fn if use_perf else None
+
     if population and population > 1:
         result = annealer_lib.simulated_annealing_population(
-            knobs, hw_cost_fn, batch_acc_fn, acc_cost_fn, anneal_cfg, population
+            knobs, hw_cost_fn, batch_acc_fn, acc_cost_fn, anneal_cfg, population,
+            extra_cost_fn=extra_cost_fn,
         )
     else:
-        result = annealer_lib.simulated_annealing(knobs, hw_cost_fn, acc_fn, acc_cost_fn, anneal_cfg)
+        result = annealer_lib.simulated_annealing(
+            knobs, hw_cost_fn, acc_fn, acc_cost_fn, anneal_cfg,
+            extra_cost_fn=extra_cost_fn,
+        )
     best_net = cfg_to_net(result.best)
     best_qparams, _ = quantize_params(best_net, float_params)
     return ExplorationResult(best_net=best_net, best_qparams=best_qparams, anneal=result, weights=weights)

@@ -12,8 +12,28 @@ reported MNIST design point:
     2 cores  ->  934 LUT, 689 FF, 7 BRAM, 1 623 logic cells (= LUT + FF),
     1.1 ms / image @ 60 MHz, 111 mW, 0.12 mJ / image.
 
-These models are *the cost functions the DSE anneals against* -- precisely
-the role they play in the paper.
+Anchoring rules (each free constant is *solved*, not tuned, so the paper's
+design point reproduces exactly and a regression test can hold it):
+
+* LUT/FF: per-bit datapath slopes are fixed interpretations; the per-core
+  controller/SPI/AMU bases are solved from the 934/689 totals
+  (``_solve_bases``).
+* Latency: the cycle model is fully determined by event counts (the paper's
+  pipeline is event-driven -- cycles scale with ASPL/ASCL traffic, not with
+  dense layer size); the anchor *operating point* -- the mean input event
+  rate the paper's deployment must have seen -- is solved from the 1.1 ms
+  figure (``_solve_anchor_input_rate``), with the hidden/output rates set to
+  representative sparse-traffic constants.
+* Energy: static + per-resource dynamic power are fixed; the switching
+  energy per synaptic event is solved from the 0.12 mJ figure at the anchor
+  traffic (``_solve_event_switching_power``).
+
+Latency and energy are therefore functions of *measured event traffic*
+(:class:`EventTraffic`, built from any backend's ``SimRecord`` or from
+``eval_int(..., return_stats=True)``), which is what lets the Flex-plorer
+anneal against realistic event-dependent latency instead of worst-case
+dense cycles.  These models are *the cost functions the DSE anneals
+against* -- precisely the role they play in the paper.
 """
 
 from __future__ import annotations
@@ -31,9 +51,13 @@ __all__ = [
     "CoreResources",
     "core_resources",
     "network_resources",
+    "EventTraffic",
+    "paper_mnist_traffic",
     "latency_seconds",
     "power_watts",
     "energy_per_image",
+    "DesignPoint",
+    "design_point",
 ]
 
 # --------------------------------------------------------------------------
@@ -188,6 +212,76 @@ def network_resources(net: NetworkConfig) -> CoreResources:
 
 
 # --------------------------------------------------------------------------
+# Measured event traffic (what the latency / energy models consume)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EventTraffic:
+    """Mean per-step event counts of one deployment: the cost-model input.
+
+    ``input_events_per_step`` -- [T] mean ASPL count into layer 0;
+    ``layer_events_per_step`` -- per layer, [T] mean spikes *emitted* (layer
+    l's entry is consumed by layer l+1, and by layer l itself on the
+    recurrent path at step t+1).  Build one from a simulation via
+    :meth:`from_record` / :meth:`from_stats`, or synthesize a constant-rate
+    operating point via :meth:`constant_rate`.
+    """
+
+    input_events_per_step: np.ndarray
+    layer_events_per_step: tuple[np.ndarray, ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "input_events_per_step", np.asarray(self.input_events_per_step, np.float64)
+        )
+        object.__setattr__(
+            self,
+            "layer_events_per_step",
+            tuple(np.asarray(e, np.float64) for e in self.layer_events_per_step),
+        )
+        T = len(self.input_events_per_step)
+        for e in self.layer_events_per_step:
+            if len(e) != T:
+                raise ValueError(f"layer event series length {len(e)} != window {T}")
+
+    @classmethod
+    def from_record(cls, record) -> "EventTraffic":
+        """Batch-mean traffic from any backend's ``SimRecord``."""
+        stats = record.event_stats()
+        return cls.from_stats(stats)
+
+    @classmethod
+    def from_stats(cls, stats: dict) -> "EventTraffic":
+        """From the dict shape of ``eval_int(..., return_stats=True)``."""
+        return cls(
+            input_events_per_step=stats["input_events_per_step"],
+            layer_events_per_step=tuple(stats["layer_events_per_step"]),
+        )
+
+    @classmethod
+    def constant_rate(
+        cls, T: int, input_rate: float, layer_rates: tuple[float, ...]
+    ) -> "EventTraffic":
+        return cls(
+            input_events_per_step=np.full(T, float(input_rate)),
+            layer_events_per_step=tuple(np.full(T, float(r)) for r in layer_rates),
+        )
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.input_events_per_step)
+
+    @property
+    def total_events_per_image(self) -> float:
+        """All events of one sample: input ASPLs + every layer's emissions."""
+        return float(
+            self.input_events_per_step.sum()
+            + sum(e.sum() for e in self.layer_events_per_step)
+        )
+
+
+# --------------------------------------------------------------------------
 # Latency model (60 MHz, pipelined cores, per-neuron sequential sweeps)
 # --------------------------------------------------------------------------
 
@@ -213,20 +307,32 @@ def step_cycles(cfg: LayerConfig, n_in_events: float, n_rec_events: float) -> fl
 
 def latency_seconds(
     net: NetworkConfig,
-    input_events_per_step: np.ndarray,  # [T] mean ASPL count into layer 0
-    layer_events_per_step: list[np.ndarray],  # per layer, [T] mean emitted spikes
+    traffic,  # EventTraffic, or legacy [T] input-event array
+    layer_events_per_step=None,  # legacy: per layer, [T] mean emitted spikes
 ) -> float:
     """End-to-end latency of one sample through the pipelined multi-core system.
 
-    Cores overlap across time steps (layer L works on step t while L+1 works
-    on step t-1), so the steady-state cost of a step is the *maximum* over
-    cores, plus a pipeline fill of one step per extra core.
+    ``traffic`` is an :class:`EventTraffic` (preferred -- build one from any
+    backend's ``SimRecord`` or from ``eval_int`` stats); the legacy two-array
+    form ``latency_seconds(net, input_events, layer_events)`` is still
+    accepted.  Cores overlap across time steps (layer L works on step t
+    while L+1 works on step t-1), so the steady-state cost of a step is the
+    *maximum* over cores, plus a pipeline fill of one step per extra core.
     """
-    T = len(input_events_per_step)
+    if not isinstance(traffic, EventTraffic):
+        traffic = EventTraffic(
+            input_events_per_step=traffic,
+            layer_events_per_step=tuple(layer_events_per_step),
+        )
+    T = traffic.n_steps
     per_core_step_cycles = np.zeros((len(net.layers), T))
     for li, cfg in enumerate(net.layers):
-        in_ev = input_events_per_step if li == 0 else layer_events_per_step[li - 1]
-        rec_ev = layer_events_per_step[li] if cfg.is_recurrent else np.zeros(T)
+        in_ev = (
+            traffic.input_events_per_step
+            if li == 0
+            else traffic.layer_events_per_step[li - 1]
+        )
+        rec_ev = traffic.layer_events_per_step[li] if cfg.is_recurrent else np.zeros(T)
         for t in range(T):
             # Recurrent events consumed at step t are the spikes of step t-1.
             rec_t = rec_ev[t - 1] if t > 0 else 0.0
@@ -239,16 +345,101 @@ def latency_seconds(
 
 
 # --------------------------------------------------------------------------
+# The paper's MNIST operating point (solved from the published 1.1 ms)
+# --------------------------------------------------------------------------
+
+_PAPER_T = 100  # the paper's MNIST inference window
+_ANCHOR_LATENCY_S = 1.1e-3
+_ANCHOR_ENERGY_J = 0.12e-3
+# Representative sparse traffic of the trained network's deeper cores (the
+# hidden core emits a few spikes per step; the rate-coded output emits ~1).
+# Only the *input* rate materially moves the cycle model (core 0 dominates),
+# so it is the one solved from the published latency.
+_ANCHOR_HIDDEN_EVENTS_PER_STEP = 6.0
+_ANCHOR_OUTPUT_EVENTS_PER_STEP = 1.0
+
+
+def _paper_anchor_net() -> NetworkConfig:
+    return NetworkConfig(
+        layers=tuple(_anchor_cores()), n_steps=_PAPER_T, name="mnist-paper-anchor"
+    )
+
+
+def _solve_anchor_input_rate() -> float:
+    """Mean input events/step implied by the paper's 1.1 ms at 60 MHz.
+
+    With constant rates, core 0 dominates every steady-state step and the
+    pipeline adds one extra core-0 step of fill, so
+
+        (T + 1) * (x * n_out + n_out + overhead) = latency * f_clk.
+
+    Solving for x pins the model to the published figure the same way
+    ``_solve_bases`` pins LUT/FF -- the anchor is reproduced *exactly* by
+    construction, and a regression test holds it.
+    """
+    net = _paper_anchor_net()
+    core0 = net.layers[0]
+    total_cycles = _ANCHOR_LATENCY_S * CLOCK_HZ
+    per_step = total_cycles / (_PAPER_T + 1)
+    x = (per_step - core0.n_out - _CONTROLLER_OVERHEAD_CYCLES) / core0.n_out
+    # the solution is only consistent if core 0 really dominates core 1
+    core1_cycles = step_cycles(net.layers[1], _ANCHOR_HIDDEN_EVENTS_PER_STEP, 0.0)
+    if x <= 0 or per_step <= core1_cycles:
+        raise RuntimeError(
+            "latency anchor solve inconsistent: core 0 must dominate the "
+            f"steady state (input rate {x:.3f}, per-step budget {per_step:.1f} "
+            f"vs core-1 {core1_cycles:.1f} cycles); check the anchor constants"
+        )
+    return x
+
+
+PAPER_MNIST_INPUT_EVENTS_PER_STEP = _solve_anchor_input_rate()
+
+
+def paper_mnist_traffic() -> EventTraffic:
+    """The anchor operating point: the event traffic at which the cycle and
+    energy models reproduce the paper's 1.1 ms / 0.12 mJ exactly."""
+    return EventTraffic.constant_rate(
+        _PAPER_T,
+        PAPER_MNIST_INPUT_EVENTS_PER_STEP,
+        (_ANCHOR_HIDDEN_EVENTS_PER_STEP, _ANCHOR_OUTPUT_EVENTS_PER_STEP),
+    )
+
+
+# --------------------------------------------------------------------------
 # Power / energy model
 # --------------------------------------------------------------------------
 
-# Zynq-7020-class static power, plus dynamic terms per resource and per
-# event-rate; calibrated so the paper's MNIST point reports 111 mW total
-# ("dominated by static power") and 0.12 mJ / image at 1.1 ms.
+# Zynq-7020-class static power plus dynamic terms per resource; the paper's
+# MNIST point reports 111 mW total ("dominated by static power").
 STATIC_WATTS = 0.095
 _DYN_W_PER_LUT = 4.0e-6
 _DYN_W_PER_BRAM = 1.0e-3
-_DYN_W_PER_MEVENT_S = 2.0e-3  # switching power per million synaptic events/s
+
+
+def _solve_event_switching_power() -> float:
+    """Watts per million synaptic events/s, solved from the 0.12 mJ anchor.
+
+    At the anchor operating point the total power must equal
+    0.12 mJ / 1.1 ms; static + resource-dynamic power is fixed by the
+    resource model, so the residual is the event-switching term.
+    """
+    net = _paper_anchor_net()
+    res = network_resources(net)
+    base = STATIC_WATTS + _DYN_W_PER_LUT * res.logic_cells + _DYN_W_PER_BRAM * res.bram
+    target_power = _ANCHOR_ENERGY_J / _ANCHOR_LATENCY_S
+    meps = paper_mnist_traffic().total_events_per_image / _ANCHOR_LATENCY_S / 1e6
+    w = (target_power - base) / meps
+    if w <= 0:
+        raise RuntimeError(
+            "energy anchor solve inconsistent: static+resource power "
+            f"({base:.4f} W) must sit below the 0.12 mJ / 1.1 ms anchor power "
+            f"({target_power:.4f} W); check STATIC_WATTS / _DYN_W_PER_*"
+        )
+    return w
+
+
+_DYN_W_PER_MEVENT_S = _solve_event_switching_power()
 
 
 def power_watts(net: NetworkConfig, events_per_second: float = 0.0) -> float:
@@ -261,6 +452,33 @@ def power_watts(net: NetworkConfig, events_per_second: float = 0.0) -> float:
     return STATIC_WATTS + dyn
 
 
-def energy_per_image(net: NetworkConfig, latency_s: float, events_per_image: float) -> float:
+def energy_per_image(net: NetworkConfig, latency_s: float, events_per_image) -> float:
+    """Energy of one sample; ``events_per_image`` is a float total or an
+    :class:`EventTraffic` (its per-image event total is used)."""
+    if isinstance(events_per_image, EventTraffic):
+        events_per_image = events_per_image.total_events_per_image
     eps = events_per_image / latency_s if latency_s > 0 else 0.0
     return power_watts(net, eps) * latency_s
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One deployment's modeled operating figures at measured traffic."""
+
+    latency_s: float
+    power_w: float
+    energy_per_image_j: float
+    events_per_image: float
+
+
+def design_point(net: NetworkConfig, traffic: EventTraffic) -> DesignPoint:
+    """Latency / power / energy of ``net`` at measured event traffic -- the
+    event-aware summary the Flex-plorer's perf cost term anneals against."""
+    lat = latency_seconds(net, traffic)
+    events = traffic.total_events_per_image
+    return DesignPoint(
+        latency_s=lat,
+        power_w=power_watts(net, events / lat if lat > 0 else 0.0),
+        energy_per_image_j=energy_per_image(net, lat, events),
+        events_per_image=events,
+    )

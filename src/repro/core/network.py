@@ -16,9 +16,11 @@ plus per-layer spike statistics that feed the latency/energy model in
 
 Both entry points take ``backend=`` -- a name registered with
 ``repro.core.backend`` (``"reference"`` step-major jnp semantics, ``"fused"``
-layer-major Pallas kernel path) or an ``InferenceBackend`` instance.  Every
-backend is held bit-exact to ``reference`` on its supported configs by
-``tests/test_backend_parity.py``.
+layer-major Pallas kernel path, ``"event"`` sparse event-driven traversal)
+or an ``InferenceBackend`` instance.  Every backend is held bit-exact to
+``reference`` on its supported configs by ``tests/test_backend_parity.py``,
+and every backend's :class:`SimRecord` carries the per-step event counts
+that feed the latency/energy model in ``repro.core.hw_model``.
 """
 
 from __future__ import annotations

@@ -53,6 +53,7 @@ __all__ = [
     "int_layer_step",
     "int_layer_step_dynamic",
     "int_layer_window",
+    "int_layer_window_from_currents",
     "fused_eligible",
     "float_layer_init",
     "float_layer_step",
@@ -169,10 +170,16 @@ def float_layer_init(cfg: LayerConfig, batch: int) -> LayerState:
     return LayerState(u=z, i_syn=z, prev_spk=z)
 
 
-def _integrate_int(cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in):
-    """Phase A: accumulate weighted spikes into the integration target."""
-    s_in_i = s_in.astype(jnp.int32)
-    acc = jnp.einsum("bi,io->bo", s_in_i, params.w_ff)  # {0,1} matmul, int32
+def _integrate_acc(cfg: LayerConfig, params: IntLayerParams, state: LayerState, ff_acc):
+    """Phase A given the step's feed-forward accumulation ``ff_acc``.
+
+    Adds the recurrent contribution (the previous step's own spikes) and
+    commits the total into the integration target register.  Saturation is
+    applied once, after the full step's accumulation -- int32 addition is
+    associative, so any exact method of computing ``ff_acc`` (dense matmul,
+    Pallas kernel, sparse gather over active rows) yields identical state.
+    """
+    acc = ff_acc
     if cfg.topology == Topology.ATA_T:
         acc = acc + jnp.einsum("bi,io->bo", state.prev_spk, params.w_rec)
     elif cfg.topology == Topology.ATA_F:
@@ -180,6 +187,13 @@ def _integrate_int(cfg: LayerConfig, params: IntLayerParams, state: LayerState, 
     if cfg.neuron == NeuronModel.SYNAPTIC:
         return state.u, saturate(state.i_syn + acc, cfg.i_bits)
     return saturate(state.u + acc, cfg.u_bits), state.i_syn
+
+
+def _integrate_int(cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in):
+    """Phase A: accumulate weighted spikes into the integration target."""
+    s_in_i = s_in.astype(jnp.int32)
+    ff_acc = jnp.einsum("bi,io->bo", s_in_i, params.w_ff)  # {0,1} matmul, int32
+    return _integrate_acc(cfg, params, state, ff_acc)
 
 
 def _int_phase_b(cfg: LayerConfig, params: IntLayerParams, u, i_syn, decay_u, decay_i):
@@ -282,6 +296,38 @@ def int_layer_window(cfg: LayerConfig, params: IntLayerParams, raster) -> jax.Ar
         return state, spk
 
     _, spikes = jax.lax.scan(step, state0, raster.astype(jnp.int32))
+    return spikes
+
+
+def int_layer_window_from_currents(
+    cfg: LayerConfig, params: IntLayerParams, ff_currents
+) -> jax.Array:
+    """Run one layer over a window of *precomputed* FF integration currents.
+
+    ``ff_currents``: int32 [T, batch, n_out], the per-step feed-forward
+    accumulation ``s_t @ w_ff`` (however it was computed -- this is the seam
+    the event-driven backend uses to feed sparse-gathered currents into the
+    exact step dynamics).  The scan adds recurrent contributions and runs
+    phase B per step, so *every* neuron model / topology / reset mode is
+    covered with numerics identical to :func:`int_layer_step`.
+    """
+    state0 = int_layer_init(cfg, ff_currents.shape[1])
+    beta_code = cfg.beta_code()
+    alpha_code = cfg.alpha_code()
+
+    def step(state, c_t):
+        u, i_syn = _integrate_acc(cfg, params, state, c_t)
+        state, spk = _int_phase_b(
+            cfg,
+            params,
+            u,
+            i_syn,
+            lambda x: coeff_gen.apply_decay(x, beta_code),
+            lambda x: coeff_gen.apply_decay(x, alpha_code),
+        )
+        return state, spk
+
+    _, spikes = jax.lax.scan(step, state0, ff_currents.astype(jnp.int32))
     return spikes
 
 

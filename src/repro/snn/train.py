@@ -151,45 +151,65 @@ def eval_int(
     """Bit-exact hardware-faithful accuracy (the DSE's accuracy evaluator).
 
     With ``return_stats``, also returns per-layer mean events per step and
-    input events per step -- the latency/energy model inputs.  ``backend``
-    selects the simulation engine (see ``repro.core.backend``); every
-    registered backend is bit-exact on its supported configs, so the choice
-    is a speed knob, not an accuracy knob.
+    input events per step -- the latency/energy model inputs (see
+    ``hw_model.EventTraffic``).  ``backend`` selects the simulation engine
+    (see ``repro.core.backend``); every registered backend is bit-exact on
+    its supported configs, so the choice is a speed knob, not an accuracy
+    knob.  Backends that declare ``jit_compatible = False`` (the
+    event-driven backend sizes its gather budgets from concrete spike
+    counts) are called without the outer jit and compile internally.
     """
+    resolved = backend_lib.get_backend(backend)
 
-    @jax.jit
     def fwd(spikes):
-        rec = run_int(net, qparams, spikes, backend=backend)
-        return rec.predictions(), [jnp.mean(s, axis=1) for s in rec.layer_spikes]
+        rec = run_int(net, qparams, spikes, backend=resolved)
+        # tolerate third-party backends that predate SimRecord.input_events
+        in_ev = rec.input_events
+        if in_ev is None:
+            in_ev = jnp.sum(spikes != 0, axis=-1)
+        return (
+            rec.predictions(),
+            [jnp.mean(s, axis=1) for s in rec.layer_spikes],
+            jnp.mean(in_ev, axis=1),
+        )
+
+    if resolved.jit_compatible:
+        fwd = jax.jit(fwd)
 
     correct = total = 0
     layer_ev = None
     in_ev = None
-    n_batches = 0
     for spikes, labels in ds.batches(batch_size):
         spikes = jnp.asarray(spikes)
-        preds, evs = fwd(spikes)
+        preds, evs, iev = fwd(spikes)
         correct += int((np.asarray(preds) == labels).sum())
-        total += len(labels)
-        n_batches += 1
-        evs = [np.asarray(e) for e in evs]
-        iev = np.asarray(spikes.sum(-1).mean(-1))
+        n = len(labels)
+        total += n
+        # weight each batch's per-sample mean by its size so a partial
+        # final batch doesn't bias the dataset-level event traffic
+        evs = [np.asarray(e) * n for e in evs]
+        iev = np.asarray(iev) * n
         layer_ev = evs if layer_ev is None else [a + b for a, b in zip(layer_ev, evs)]
         in_ev = iev if in_ev is None else in_ev + iev
     acc = correct / max(1, total)
     if not return_stats:
         return acc
-    layer_ev = [e / n_batches for e in layer_ev]
-    in_ev = in_ev / n_batches
+    layer_ev = [e / max(1, total) for e in layer_ev]
+    in_ev = in_ev / max(1, total)
     return acc, {"input_events_per_step": in_ev, "layer_events_per_step": layer_ev}
 
 
 @functools.partial(jax.jit, static_argnums=0)
 def _population_fwd(net, stacked_qparams, beta_regs, alpha_regs, spikes):
-    counts = backend_lib.run_int_population(
-        net, stacked_qparams, beta_regs, alpha_regs, spikes
+    counts, emitted = backend_lib.run_int_population(
+        net, stacked_qparams, beta_regs, alpha_regs, spikes, return_events=True
     )
-    return jnp.argmax(counts, axis=-1)  # [P, batch]
+    # [P, batch] predictions; [P, T, L] batch-mean emitted events; [T] input
+    return (
+        jnp.argmax(counts, axis=-1),
+        jnp.mean(emitted, axis=-1),
+        jnp.mean(jnp.sum(spikes != 0, axis=-1), axis=-1),
+    )
 
 
 def eval_int_population(
@@ -198,7 +218,8 @@ def eval_int_population(
     qparams_list: Sequence[list],
     ds: SpikeDataset,
     batch_size: int = 256,
-) -> np.ndarray:
+    return_stats: bool = False,
+):
     """Bit-exact accuracies for a population of precision candidates at once.
 
     All candidates share ``net``'s static structure (the DSE varies only
@@ -210,7 +231,11 @@ def eval_int_population(
     serial path pays one trace+compile per candidate.
 
     Returns a float accuracy per candidate, identical to calling
-    :func:`eval_int` per candidate (asserted by the parity suite).
+    :func:`eval_int` per candidate (asserted by the parity suite).  With
+    ``return_stats``, also returns one per-candidate event-traffic dict of
+    the same shape as ``eval_int(..., return_stats=True)`` -- each
+    candidate quantizes differently and therefore spikes differently, which
+    is exactly what the event-aware DSE cost needs to see.
     """
     backend_lib.check_population_structure(net, candidate_nets)
     stacked, beta_regs, alpha_regs = backend_lib.stack_population(
@@ -219,8 +244,28 @@ def eval_int_population(
     P = len(candidate_nets)
     correct = np.zeros(P, np.int64)
     total = 0
+    layer_ev = None  # [P, T, L] running size-weighted sum of batch means
+    in_ev = None  # [T]
     for spikes, labels in ds.batches(batch_size):
-        preds = np.asarray(_population_fwd(net, stacked, beta_regs, alpha_regs, jnp.asarray(spikes)))
+        preds, evs, iev = _population_fwd(net, stacked, beta_regs, alpha_regs, jnp.asarray(spikes))
+        preds = np.asarray(preds)
         correct += (preds == labels[None, :]).sum(axis=1)
-        total += len(labels)
-    return correct / max(1, total)
+        n = len(labels)
+        total += n
+        # size-weighted like eval_int: partial batches must not bias traffic
+        evs, iev = np.asarray(evs) * n, np.asarray(iev) * n
+        layer_ev = evs if layer_ev is None else layer_ev + evs
+        in_ev = iev if in_ev is None else in_ev + iev
+    accs = correct / max(1, total)
+    if not return_stats:
+        return accs
+    layer_ev = layer_ev / max(1, total)
+    in_ev = in_ev / max(1, total)
+    stats = [
+        {
+            "input_events_per_step": in_ev,
+            "layer_events_per_step": [layer_ev[p, :, l] for l in range(layer_ev.shape[2])],
+        }
+        for p in range(P)
+    ]
+    return accs, stats

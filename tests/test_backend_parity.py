@@ -13,7 +13,7 @@ import pytest
 
 from repro.core import backend as backend_lib
 from repro.core import coeff_gen
-from repro.core.backend import FusedBackend, get_backend
+from repro.core.backend import EventBackend, FusedBackend, get_backend
 from repro.core.network import (
     NetworkConfig,
     init_float_params,
@@ -64,6 +64,8 @@ def _assert_records_equal(a, b):
     assert len(a.layer_spikes) == len(b.layer_spikes)
     for x, y in zip(a.layer_spikes, b.layer_spikes):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.input_events is not None and b.input_events is not None
+    np.testing.assert_array_equal(np.asarray(a.input_events), np.asarray(b.input_events))
 
 
 @pytest.mark.parametrize("neuron", NEURONS)
@@ -215,9 +217,149 @@ def test_explore_snn_population_mode_agrees_with_serial():
 
 
 def test_backend_registry():
-    assert {"reference", "fused"} <= set(backend_lib.available_backends())
+    assert {"reference", "fused", "event"} <= set(backend_lib.available_backends())
     assert get_backend("fused").name == "fused"
+    assert get_backend("event").name == "event"
+    assert get_backend("reference").jit_compatible
+    assert not get_backend("event").jit_compatible
     inst = FusedBackend(use_pallas=False)
     assert get_backend(inst) is inst
     with pytest.raises(ValueError, match="unknown inference backend"):
         get_backend("warp-drive")
+
+
+# ---------------------------------------------------------------------------
+# Event-driven backend: bit-exact sparse execution incl. every fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("neuron", NEURONS)
+@pytest.mark.parametrize("reset", RESETS)
+@pytest.mark.parametrize("rate", [0.02, 0.1, 0.3], ids=["sparse2", "sparse10", "mid30"])
+def test_event_bit_exact_ff(neuron, reset, rate):
+    """Event backend == reference on IF/LIF x reset x input sparsity levels."""
+    net = _make_net(19, 11, 5, 7, neuron, reset)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 7, 3, rate=rate)
+    ref = run_int(net, qparams, spikes)
+    ev = run_int(net, qparams, spikes, backend="event")
+    _assert_records_equal(ref, ev)
+
+
+@pytest.mark.parametrize(
+    "neuron,topology",
+    [
+        (NeuronModel.SYNAPTIC, Topology.FF),
+        (NeuronModel.LIF, Topology.ATA_F),
+        (NeuronModel.LIF, Topology.ATA_T),
+        (NeuronModel.SYNAPTIC, Topology.ATA_T),
+    ],
+    ids=["synaptic", "ata_f", "ata_t", "synaptic_ata_t"],
+)
+def test_event_covers_recurrent_and_synaptic_sparsely(neuron, topology):
+    """Unlike fused, the event path covers every config: the sparse gather
+    feeds precomputed FF currents into the shared step scan."""
+    net = _make_net(17, 10, 6, 9, neuron, ResetMode.SUBTRACT, topology=topology)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 9, 4, rate=0.15)
+    _assert_records_equal(
+        run_int(net, qparams, spikes), run_int(net, qparams, spikes, backend="event")
+    )
+
+
+def test_event_dense_fallback_bit_exact():
+    """Near-dense input trips the density fallback; numerics must not move."""
+    net = _make_net(19, 11, 5, 6, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 6, 3, rate=0.95)
+    backend = EventBackend(dense_threshold=0.3)
+    # budget for a 95%-dense raster exceeds the threshold on layer 0
+    k_max = int(np.asarray(spikes.sum(-1)).max())
+    assert k_max > 0.3 * net.n_in
+    _assert_records_equal(
+        run_int(net, qparams, spikes), run_int(net, qparams, spikes, backend=backend)
+    )
+
+
+def test_event_traced_fallback_under_outer_jit():
+    """Inside a caller's jit there are no concrete counts; the event backend
+    must transparently delegate to reference semantics, still bit-exact."""
+    net = _make_net(16, 8, 4, 5, NeuronModel.LIF, ResetMode.ZERO)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 5, 2, rate=0.2)
+
+    @jax.jit
+    def fwd(s):
+        return run_int(net, qparams, s, backend="event").spike_counts
+
+    np.testing.assert_array_equal(
+        np.asarray(fwd(spikes)), np.asarray(run_int(net, qparams, spikes).spike_counts)
+    )
+
+
+def test_event_zero_input_window():
+    """An all-silent raster (zero events) must not break budget sizing."""
+    net = _make_net(16, 8, 4, 5, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    spikes = jnp.zeros((5, 3, 16), jnp.int32)
+    _assert_records_equal(
+        run_int(net, qparams, spikes), run_int(net, qparams, spikes, backend="event")
+    )
+
+
+def test_eval_int_event_backend_parity_on_dataset():
+    """eval_int resolves the event backend without the outer jit and matches."""
+    net = _make_net(256, 32, 10, 8, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    ds = mnist_like(n=96, T=8, seed=3)
+    ref_acc, ref_stats = eval_int(net, qparams, ds, batch_size=48, return_stats=True)
+    ev_acc, ev_stats = eval_int(
+        net, qparams, ds, batch_size=48, return_stats=True, backend="event"
+    )
+    assert ref_acc == ev_acc
+    np.testing.assert_allclose(
+        ref_stats["input_events_per_step"], ev_stats["input_events_per_step"]
+    )
+    for a, b in zip(ref_stats["layer_events_per_step"], ev_stats["layer_events_per_step"]):
+        np.testing.assert_allclose(a, b)
+
+
+def test_record_event_stats_shapes():
+    net = _make_net(19, 11, 5, 7, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    rec = run_int(net, qparams, _spikes(net, 7, 3), backend="event")
+    stats = rec.event_stats()
+    assert stats["input_events_per_step"].shape == (7,)
+    assert [e.shape for e in stats["layer_events_per_step"]] == [(7,), (7,)]
+    total = rec.total_events_per_image()
+    assert total == pytest.approx(
+        stats["input_events_per_step"].sum()
+        + sum(e.sum() for e in stats["layer_events_per_step"])
+    )
+
+
+def test_explore_snn_event_aware_perf_cost():
+    """c_perf > 0 adds the event-driven latency/energy term; serial and
+    population modes score shared candidates identically on acc AND perf."""
+    from repro.core.flexplorer import annealer as annealer_lib
+    from repro.core.flexplorer import cost as cost_lib
+    from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+
+    net = _make_net(32, 16, 4, 6, NeuronModel.LIF, ResetMode.SUBTRACT)
+    params = init_float_params(jax.random.PRNGKey(1), net)
+    ds = mnist_like(n=64, T=6, seed=6)
+    ds.spikes = ds.spikes[:, :, : net.n_in]
+    ds.labels = ds.labels % 4
+    space = SNNSearchSpace(ff_bits=(4, 6, 8), leak_bits=(3, 8))
+    cfg = annealer_lib.AnnealConfig(t_start=1.0, t_min=0.2, alpha=0.5, seed=0)
+    w = cost_lib.CostWeights(c_hw=0.4, c_acc=0.4, c_perf=0.2)
+    serial = explore_snn(net, params, ds, space=space, anneal_cfg=cfg, eval_batch=32, weights=w)
+    pop = explore_snn(
+        net, params, ds, space=space, anneal_cfg=cfg, eval_batch=32, weights=w, population=4
+    )
+    assert serial.anneal.best_breakdown["perf_cost"] > 0
+    shared = serial.anneal.cache.keys() & pop.anneal.cache.keys()
+    assert shared
+    for c in shared:
+        assert serial.anneal.cache[c][3] == pop.anneal.cache[c][3]  # accuracy
+        assert serial.anneal.cache[c][4] == pytest.approx(pop.anneal.cache[c][4])  # perf

@@ -1,0 +1,94 @@
+"""Event-backend property sweep: sparse gather == dense reference, always.
+
+Random networks across neuron models x topologies x reset modes x bit widths
+x input densities (including fully silent and near-dense rasters, which
+exercise the budget floor and the dense fallback).  Self-skips without
+hypothesis; the always-on event parity anchors live in
+``tests/test_backend_parity.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backend import EventBackend
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+    run_int,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel, ResetMode, Topology
+
+NEURONS = [NeuronModel.IF, NeuronModel.LIF, NeuronModel.SYNAPTIC]
+TOPOS = [Topology.FF, Topology.ATA_F, Topology.ATA_T]
+
+
+@st.composite
+def network_case(draw):
+    n_in = draw(st.integers(3, 40))
+    hidden = draw(st.integers(2, 24))
+    n_out = draw(st.integers(2, 10))
+    neuron = draw(st.sampled_from(NEURONS))
+    topology = draw(st.sampled_from(TOPOS))
+    reset = draw(st.sampled_from([ResetMode.ZERO, ResetMode.SUBTRACT]))
+    net = NetworkConfig(
+        layers=(
+            LayerConfig(
+                n_in=n_in, n_out=hidden, neuron=neuron, topology=topology,
+                reset=reset, w_bits=draw(st.integers(3, 8)),
+                leak_bits=draw(st.integers(2, 8)),
+                beta=draw(st.floats(0.3, 0.99)), alpha=draw(st.floats(0.3, 0.99)),
+            ),
+            LayerConfig(
+                n_in=hidden, n_out=n_out, neuron=neuron, reset=reset,
+                beta=draw(st.floats(0.3, 0.99)), alpha=draw(st.floats(0.3, 0.99)),
+            ),
+        ),
+        n_steps=draw(st.integers(2, 8)),
+    )
+    rate = draw(st.sampled_from([0.0, 0.03, 0.1, 0.3, 0.7, 1.0]))
+    batch = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    threshold = draw(st.sampled_from([0.2, 0.5, 1.0]))
+    return net, rate, batch, seed, threshold
+
+
+@given(network_case())
+@settings(max_examples=40, deadline=None)
+def test_event_backend_matches_reference(case):
+    """run_int(backend="event") is bit-identical to reference everywhere."""
+    net, rate, batch, seed, _ = case
+    key = jax.random.PRNGKey(seed)
+    params = init_float_params(key, net)
+    qparams, _ = quantize_params(net, params)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (net.n_steps, batch, net.n_in))
+    spikes = (u < rate).astype(jnp.int32)
+
+    ref = run_int(net, qparams, spikes)
+    ev = run_int(net, qparams, spikes, backend="event")
+    np.testing.assert_array_equal(np.asarray(ref.spike_counts), np.asarray(ev.spike_counts))
+    for a, b in zip(ref.layer_spikes, ev.layer_spikes):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(ref.input_events), np.asarray(ev.input_events)
+    )
+
+
+@given(network_case(), st.floats(0.05, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_event_backend_threshold_invariant(case, dense_threshold):
+    """The dense/sparse routing knob is a speed knob, never a numerics knob."""
+    net, rate, batch, seed, _ = case
+    key = jax.random.PRNGKey(seed)
+    params = init_float_params(key, net)
+    qparams, _ = quantize_params(net, params)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (net.n_steps, batch, net.n_in))
+    spikes = (u < rate).astype(jnp.int32)
+    a = run_int(net, qparams, spikes, backend=EventBackend(dense_threshold=dense_threshold))
+    b = run_int(net, qparams, spikes)
+    np.testing.assert_array_equal(np.asarray(a.spike_counts), np.asarray(b.spike_counts))

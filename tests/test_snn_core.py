@@ -30,6 +30,47 @@ def test_raster_to_packets_ends_with_eoin():
     assert len(steps[0]) == 3  # two ASPL + EOTS
 
 
+def test_packet_words_pinned():
+    """The exact wire encodings the events.py docstring documents.
+
+    ASPL is 9-bit {control=0, addr[7:0]}; ASCL is the bare 8-bit address
+    (the recurrent path has its own FIFO, so no control bit is needed);
+    EOTS/EOIN are control words 0x100 / 0x101.  Changing any of these must
+    fail here AND require a docstring update -- they are the AER contract.
+    """
+    assert encode_packet(PacketKind.ASPL, 0) == 0x000
+    assert encode_packet(PacketKind.ASPL, 0xAB) == 0x0AB
+    assert encode_packet(PacketKind.ASCL, 0xAB) == 0x0AB
+    assert encode_packet(PacketKind.EOTS) == 0x100
+    assert encode_packet(PacketKind.EOIN) == 0x101
+    assert decode_packet(0x100) == (PacketKind.EOTS, 0)
+    assert decode_packet(0x101) == (PacketKind.EOIN, 1)
+    assert decode_packet(0x0AB) == (PacketKind.ASPL, 0xAB)
+    assert decode_packet(0x0AB, recurrent_path=True) == (PacketKind.ASCL, 0xAB)
+    for bad in (-1, 256):
+        with pytest.raises(ValueError):
+            encode_packet(PacketKind.ASPL, bad)
+
+
+def test_eoin_lazy_reset_zeroes_state_after_spike_generation():
+    """EOIN semantics: the final step still integrates, leaks and fires
+    normally, then the sweep writes zeros instead of the computed next
+    state -- so spikes of the last step are real but no state leaks into
+    the next sample."""
+    from repro.core.events import EventDrivenCore
+    from repro.core.snn_layer import NeuronModel
+
+    cfg = LayerConfig(n_in=2, n_out=2, neuron=NeuronModel.SYNAPTIC, beta=0.9, alpha=0.9)
+    core = EventDrivenCore(
+        cfg, w_ff=np.asarray([[60, 1], [1, 1]]), w_rec=np.zeros((0,)), theta_q=50
+    )
+    fired = core.step([0], last=True)  # EOIN step: source 0 spikes
+    assert fired == [0]  # integration + spike generation still happened
+    assert (core.u == 0).all() and (core.i_syn == 0).all()  # lazy reset
+    # a fresh sample starting now sees virgin state: same input, same result
+    assert core.step([0], last=True) == [0]
+
+
 # ---------------------------------------------------------------------------
 # hardware model anchors (paper Table 2 design point)
 # ---------------------------------------------------------------------------
@@ -70,6 +111,44 @@ def test_bram36_aspect_selection():
     # 4096 x 48 maps best as 6 BRAMs in 4Kx9 aspect (paper's core-1 memory)
     assert hw_model.bram36_count(4096, 48) == 6
     assert hw_model.bram36_count(256, 48) == 1
+
+
+def test_paper_design_point_reproduced_exactly():
+    """Regression: the event-count-calibrated latency/energy model must keep
+    reproducing the paper's full MNIST design point -- 934 LUT / 689 FF /
+    7 BRAM and, at the anchor operating traffic, 1.1 ms and 0.12 mJ."""
+    net = _paper_net()
+    res = hw_model.network_resources(net)
+    assert res.lut == pytest.approx(934, abs=1.0)
+    assert res.ff == pytest.approx(689, abs=1.0)
+    assert res.bram == 7
+    traffic = hw_model.paper_mnist_traffic()
+    lat = hw_model.latency_seconds(net, traffic)
+    assert lat == pytest.approx(1.1e-3, rel=1e-9)
+    e_img = hw_model.energy_per_image(net, lat, traffic)
+    assert e_img == pytest.approx(0.12e-3, rel=1e-9)
+    dp = hw_model.design_point(net, traffic)
+    assert dp.latency_s == lat and dp.energy_per_image_j == e_img
+    assert dp.power_w == pytest.approx(0.12e-3 / 1.1e-3, rel=1e-9)  # ~109 mW
+
+
+def test_latency_from_measured_record_traffic():
+    """EventTraffic.from_record plugs any backend's SimRecord straight into
+    the latency model (the legacy two-array call must agree)."""
+    net = _paper_net()
+    params = init_float_params(jax.random.PRNGKey(0), net)
+    qparams, _ = quantize_params(net, params)
+    spikes = (jax.random.uniform(jax.random.PRNGKey(1), (10, 4, 256)) < 0.05).astype(jnp.int32)
+    rec = run_int(net, qparams, spikes, backend="event")
+    traffic = hw_model.EventTraffic.from_record(rec)
+    lat = hw_model.latency_seconds(net, traffic)
+    stats = rec.event_stats()
+    legacy = hw_model.latency_seconds(
+        net, stats["input_events_per_step"], stats["layer_events_per_step"]
+    )
+    assert lat == legacy
+    assert 0 < lat < 1.0
+    assert traffic.total_events_per_image == pytest.approx(rec.total_events_per_image())
 
 
 def test_quantized_network_runs_and_counts_spikes():
