@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
                (reference vs fused, serial vs population; BENCH_backend.json)
   event     -- event-driven backend throughput vs input sparsity
                (reference vs fused vs event; BENCH_event.json)
+  serve     -- continuous-batching SNN service vs serial run_int
+               (closed-loop + offered-load p50/p99; BENCH_serve.json)
   roofline  -- per (arch x shape) roofline terms from the dry-run records
 
 Usage: python -m benchmarks.run [--only table1,roofline] [--fast]
@@ -21,7 +23,7 @@ import argparse
 import sys
 import traceback
 
-MODULES = ["cg_error", "kernels", "backend", "event", "roofline", "lm_dse", "table2", "table1", "fig11"]
+MODULES = ["cg_error", "kernels", "backend", "event", "serve", "roofline", "lm_dse", "table2", "table1", "fig11"]
 
 
 def _rows(name: str, fast: bool):
@@ -57,6 +59,10 @@ def _rows(name: str, fast: bool):
         from benchmarks import event_bench
 
         return event_bench.run(fast=fast)
+    if name == "serve":
+        from benchmarks import serve_bench
+
+        return serve_bench.run(fast=fast)
     if name == "roofline":
         from benchmarks import roofline
 

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Docs link checker: fail on broken relative links in the repo's markdown.
+
+Scans README.md, the other root-level *.md files, and docs/*.md for inline
+markdown links ``[text](target)`` and validates every *relative* target:
+
+* the referenced file (or directory) must exist, resolved against the
+  linking file's own directory;
+* a ``#fragment`` -- in-file or cross-file -- must match a heading in the
+  target markdown file, using GitHub's slug rules (lowercase, punctuation
+  stripped, spaces to dashes);
+* absolute URLs (``http(s)://``, ``mailto:``) are skipped -- the container
+  is offline, and external rot is not this check's job.
+
+Exit code 1 lists every broken link.  Run from anywhere:
+
+    python scripts/check_doc_links.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip formatting markers (backticks,
+    asterisks) and punctuation, keep word chars incl. underscores, spaces to
+    dashes."""
+    text = re.sub(r"[*`]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: pathlib.Path) -> set[str]:
+    """All heading anchors of a file, including GitHub's ``-N`` suffixes for
+    repeated headings (second occurrence of ``## Setup`` is ``#setup-1``)."""
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    counts: dict[str, int] = {}
+    anchors: set[str] = set()
+    for heading in HEADING_RE.findall(text):
+        slug = _slugify(heading)
+        n = counts.get(slug, 0)
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+        counts[slug] = n + 1
+    return anchors
+
+
+def _doc_files() -> list[pathlib.Path]:
+    files = sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check() -> list[str]:
+    errors = []
+    for md in _doc_files():
+        text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+        rel = md.relative_to(ROOT)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{rel}: broken link target {target!r}")
+                    continue
+            else:
+                dest = md
+            if fragment:
+                if dest.is_file() and dest.suffix == ".md":
+                    # fragments must match the anchor verbatim -- GitHub
+                    # does no normalisation on the link side
+                    if fragment not in _anchors(dest):
+                        errors.append(f"{rel}: missing anchor {target!r}")
+                elif not dest.is_file():
+                    errors.append(f"{rel}: anchor into non-file {target!r}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    files = _doc_files()
+    if errors:
+        print(f"checked {len(files)} markdown files: {len(errors)} broken link(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"checked {len(files)} markdown files: all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

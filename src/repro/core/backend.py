@@ -64,6 +64,16 @@ candidates -- same static network structure, different quantized weights,
 thresholds and CG decay registers -- runs through one jitted, vmapped
 program (``run_int_population``), eliminating the per-candidate
 recompile-and-run that dominates serial DSE wall-clock.
+
+The same one-compiled-program-many-lanes idea, batched over *samples*
+instead of candidates, is exposed as the serving seam: ``batched_lane_init``
+/ ``batched_lane_window`` advance a fixed pool of independent sample lanes
+by a chunk of time steps per jitted call (what ``repro.serve.snn_engine``
+drives for continuous batching), and ``run_int_batched`` runs a whole
+ragged batch of variable-length samples through one jitted scan.  Each lane's
+trajectory is bit-exact with a serial single-sample ``run_int``: the step
+dynamics are elementwise/matmul over the batch axis, so batching lanes is
+semantically a ``jax.vmap`` of the single-sample step.
 """
 
 from __future__ import annotations
@@ -86,6 +96,7 @@ from repro.core.snn_layer import (
     int_layer_step,
     int_layer_step_dynamic,
     int_layer_window,
+    int_layer_window_carry,
     int_layer_window_from_currents,
 )
 from repro.kernels.lif_scan.lif_scan import lif_scan
@@ -104,6 +115,10 @@ __all__ = [
     "check_population_structure",
     "stack_population",
     "run_int_population",
+    "batched_lane_init",
+    "batched_lane_window",
+    "batched_lane_tick",
+    "run_int_batched",
 ]
 
 
@@ -666,3 +681,181 @@ def run_int_population(
     if return_events:
         return counts, emitted
     return counts
+
+
+# ---------------------------------------------------------------------------
+# Batched lane stepping (the SNN serving engine's hot path)
+# ---------------------------------------------------------------------------
+
+
+def batched_lane_init(net, n_lanes: int) -> list:
+    """Fresh per-layer states for a pool of ``n_lanes`` independent lanes.
+
+    A *lane* holds one in-flight sample; lanes never interact (every step
+    operation is elementwise or a matmul over the batch axis), so a pool of
+    lanes at different local time steps evolves each lane exactly as a
+    serial single-sample run would.
+    """
+    return [int_layer_init(cfg, n_lanes) for cfg in net.layers]
+
+
+def _ff_currents_f32_exact(x, w_ff):
+    """Feed-forward chunk integration through the f32 BLAS path, bit-exactly.
+
+    Every partial sum is an integer with magnitude <= max_spike * n_in *
+    int_max(w_bits); the *caller* guarantees that bound stays below 2**24
+    (f32's exact-integer range), so products, partial sums in any
+    association order, and the final cast back to int32 are all exact.
+    On CPU this routes the hot matmul through BLAS instead of XLA's naive
+    integer loops.
+    """
+    T, B, n_in = x.shape
+    flat = x.reshape(T * B, n_in).astype(jnp.float32)
+    cur = flat @ w_ff.astype(jnp.float32)
+    return cur.astype(jnp.int32).reshape(T, B, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("net", "ff_mode"))
+def batched_lane_window(
+    net, qparams, states, x_chunk, reset_mask, valid_steps=None, ff_mode="int32"
+):
+    """Advance every lane by ``k`` time steps through the whole core stack.
+
+    ``states``   -- list over layers of per-lane :class:`LayerState` (from
+                    :func:`batched_lane_init`);
+    ``x_chunk``  -- int [k, n_lanes, n_in], each active lane's raster
+                    slice starting at its *own* local step (inactive lanes
+                    and steps past a lane's window: zeros);
+    ``reset_mask`` -- bool [n_lanes], lanes newly admitted since the last
+                    call; their state is zeroed (== ``int_layer_init``)
+                    before stepping, so admission never perturbs a lane's
+                    bit-exact trajectory and freed lanes can be reused
+                    immediately (continuous batching);
+    ``valid_steps`` -- optional int [n_lanes]: per lane, how many of the
+                    chunk's steps fall inside its own window.  Recorded
+                    outputs are masked past a lane's validity (residual
+                    membrane charge could otherwise keep firing on
+                    zero-input padding steps), so a lane may *complete
+                    mid-chunk* bit-exactly.  ``None`` records every step.
+
+    Returns ``(states, out_spikes [k, n_lanes, n_classes], emitted
+    [k, n_layers, n_lanes])`` -- the final layer's per-step spikes plus
+    every layer's per-step per-lane emitted-event count (what per-request
+    ``event_stats`` accumulates from).
+
+    One jitted call advances all lanes ``k`` steps: per-call dispatch
+    overhead -- not the tiny per-step arithmetic -- dominates a CPU/edge
+    serving loop, so the engine amortises it over a chunk.  The program
+    specialises on ``k``; callers bound compilation count by quantising
+    ``k`` (the serving engine uses powers of two, with ``valid_steps``
+    absorbing the overshoot past the earliest lane completion).
+
+    The traversal is layer-major *within* the chunk (legal for the same
+    reason the fused/event backends are: inter-core traffic is strictly
+    feed-forward and step-aligned): each layer integrates its whole chunk
+    in one feed-forward matmul and carries its state through the shared
+    step scan (``int_layer_window_carry``), which layers recurrence and
+    phase B on top -- so every neuron model / topology / reset mode is
+    covered bit-exactly while the hot matmul runs at [k * n_lanes, n_in]
+    instead of k separate [n_lanes, n_in] slivers.
+
+    ``ff_mode`` (static) selects how the feed-forward matmul is computed:
+    ``"int32"`` (exact by construction) or ``"f32_exact"``, which routes it
+    through the f32 BLAS path -- still bit-exact *provided the caller has
+    checked* ``max_spike_value * n_in * int_max(w_bits) < 2**24`` for every
+    layer (the serving engine checks this per network and per request;
+    deeper layers always qualify because phase-B spikes are {0,1}).
+    """
+    states = jax.tree.map(
+        lambda a: jnp.where(reset_mask[:, None], jnp.zeros_like(a), a), states
+    )
+    k = x_chunk.shape[0]
+    x = x_chunk.astype(jnp.int32)
+    new_states, emitted = [], []
+    for cfg, p, st in zip(net.layers, qparams, states):
+        if ff_mode == "f32_exact":
+            currents = _ff_currents_f32_exact(x, p.w_ff)
+        else:
+            currents = spike_integrate(x, p.w_ff, use_pallas=False)
+        st, x = int_layer_window_carry(cfg, p, st, currents)
+        new_states.append(st)
+        emitted.append(jnp.sum(x, axis=-1))  # [k, n_lanes]
+    out_spikes = x
+    emitted = jnp.stack(emitted, axis=1)  # [k, n_layers, n_lanes]
+    if valid_steps is not None:
+        live = (jnp.arange(k)[:, None] < valid_steps[None, :]).astype(jnp.int32)
+        out_spikes = out_spikes * live[:, :, None]
+        emitted = emitted * live[:, None, :]
+    return new_states, out_spikes, emitted
+
+
+def batched_lane_tick(net, qparams, states, x_t, reset_mask):
+    """Single-step convenience form of :func:`batched_lane_window`.
+
+    Returns ``(states, out_spikes [n_lanes, n_classes], emitted
+    [n_layers, n_lanes])`` for one tick.
+    """
+    states, out, emitted = batched_lane_window(
+        net, qparams, states, x_t[None], reset_mask
+    )
+    return states, out[0], emitted[0]
+
+
+@functools.partial(jax.jit, static_argnames=("net",))
+def _run_int_batched_jit(net, qparams, rasters, lengths):
+    T, B, _ = rasters.shape
+    states = [int_layer_init(cfg, B) for cfg in net.layers]
+
+    def one_step(states, inp):
+        s_t, t = inp
+        live = (t < lengths).astype(jnp.int32)  # [B]
+        new_states, emitted = [], []
+        x = s_t
+        for cfg, p, st in zip(net.layers, qparams, states):
+            st, x = int_layer_step(cfg, p, st, x)
+            new_states.append(st)
+            emitted.append(jnp.sum(x, axis=-1) * live)
+        return new_states, (x * live[:, None], jnp.stack(emitted, axis=0))
+
+    ts = jnp.arange(T)
+    _, (out_spikes, emitted) = jax.lax.scan(one_step, states, (rasters, ts))
+    counts = jnp.sum(out_spikes, axis=0)
+    live = ts[:, None] < lengths[None, :]  # [T, B]
+    input_events = jnp.sum(rasters != 0, axis=-1) * live
+    return counts, emitted, input_events
+
+
+def run_int_batched(net, qparams, rasters, lengths=None) -> SimRecord:
+    """One vmap-batched run over a ragged batch of variable-length samples.
+
+    ``rasters`` int [T_max, B, n_in], each sample zero-padded to the longest
+    window; ``lengths`` int [B] gives each sample's true window (``None`` =
+    all full length).  One jitted scan of :func:`batched_lane_tick`'s step
+    advances every sample in lockstep; a sample's contributions (output
+    spikes, emitted events, input events) are masked out past its own
+    length, so every per-sample slice of the returned :class:`SimRecord` is
+    bit-exact with a serial single-sample ``run_int`` over that sample's
+    unpadded window (zero-input padding steps could otherwise still fire
+    from residual membrane charge).
+
+    This is the whole-window form of the serving seam: the population sweep
+    batches *candidates* with one compiled program, this batches *samples*.
+    Per-sample record views: ``spike_counts[b]``, ``layer_spikes[l][:Tb, b]``,
+    ``input_events[:Tb, b]``.
+    """
+    rasters = jnp.asarray(rasters).astype(jnp.int32)
+    T, B, _ = rasters.shape
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        if lengths.shape != (B,):
+            raise ValueError(f"lengths must be [B]={B}, got {lengths.shape}")
+    counts, emitted, input_events = _run_int_batched_jit(
+        net, list(qparams), rasters, lengths
+    )
+    return SimRecord(
+        spike_counts=counts,
+        layer_spikes=[emitted[:, i, :] for i in range(len(net.layers))],
+        input_events=input_events,
+    )

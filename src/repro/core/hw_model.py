@@ -39,6 +39,7 @@ against* -- precisely the role they play in the paper.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import numpy as np
@@ -204,7 +205,10 @@ def core_resources(cfg: LayerConfig) -> CoreResources:
     return CoreResources(lut=lut, ff=ff, bram=bram)
 
 
+@functools.lru_cache(maxsize=1024)
 def network_resources(net: NetworkConfig) -> CoreResources:
+    # cached: configs are frozen/hashable, and the serving engine evaluates a
+    # design point per completed request against one fixed network
     total = CoreResources(0.0, 0.0, 0)
     for cfg in net.layers:
         total = total + core_resources(cfg)
@@ -332,11 +336,18 @@ def latency_seconds(
             if li == 0
             else traffic.layer_events_per_step[li - 1]
         )
-        rec_ev = traffic.layer_events_per_step[li] if cfg.is_recurrent else np.zeros(T)
-        for t in range(T):
-            # Recurrent events consumed at step t are the spikes of step t-1.
-            rec_t = rec_ev[t - 1] if t > 0 else 0.0
-            per_core_step_cycles[li, t] = step_cycles(cfg, float(in_ev[t]), float(rec_t))
+        # Recurrent events consumed at step t are the spikes of step t-1
+        # (vectorised form of ``step_cycles`` over the window; identical
+        # arithmetic, held together by test_snn_core's latency tests).
+        rec_ev = np.zeros(T)
+        if cfg.is_recurrent:
+            rec_ev[1:] = traffic.layer_events_per_step[li][:-1]
+        cycles = in_ev * cfg.n_out
+        if cfg.topology == Topology.ATA_T:
+            cycles = cycles + rec_ev * cfg.n_out
+        elif cfg.topology == Topology.ATA_F:
+            cycles = cycles + rec_ev
+        per_core_step_cycles[li] = cycles + cfg.n_out + _CONTROLLER_OVERHEAD_CYCLES
     steady = per_core_step_cycles.max(axis=0).sum()
     fill = sum(
         per_core_step_cycles[li, 0] for li in range(len(net.layers) - 1)

@@ -53,6 +53,7 @@ __all__ = [
     "int_layer_step",
     "int_layer_step_dynamic",
     "int_layer_window",
+    "int_layer_window_carry",
     "int_layer_window_from_currents",
     "fused_eligible",
     "float_layer_init",
@@ -299,19 +300,18 @@ def int_layer_window(cfg: LayerConfig, params: IntLayerParams, raster) -> jax.Ar
     return spikes
 
 
-def int_layer_window_from_currents(
-    cfg: LayerConfig, params: IntLayerParams, ff_currents
-) -> jax.Array:
-    """Run one layer over a window of *precomputed* FF integration currents.
+def int_layer_window_carry(
+    cfg: LayerConfig, params: IntLayerParams, state: LayerState, ff_currents
+) -> tuple[LayerState, jax.Array]:
+    """Carried-state form of :func:`int_layer_window_from_currents`.
 
-    ``ff_currents``: int32 [T, batch, n_out], the per-step feed-forward
-    accumulation ``s_t @ w_ff`` (however it was computed -- this is the seam
-    the event-driven backend uses to feed sparse-gathered currents into the
-    exact step dynamics).  The scan adds recurrent contributions and runs
-    phase B per step, so *every* neuron model / topology / reset mode is
-    covered with numerics identical to :func:`int_layer_step`.
+    Starts from ``state`` (instead of a fresh init) and returns the state
+    after the window alongside the spikes -- the seam for callers that
+    advance a layer chunk-by-chunk (the serving engine's lane pool): running
+    two consecutive chunks through this function is bit-identical to one
+    longer window, which is bit-identical to iterated
+    :func:`int_layer_step`.
     """
-    state0 = int_layer_init(cfg, ff_currents.shape[1])
     beta_code = cfg.beta_code()
     alpha_code = cfg.alpha_code()
 
@@ -327,7 +327,23 @@ def int_layer_window_from_currents(
         )
         return state, spk
 
-    _, spikes = jax.lax.scan(step, state0, ff_currents.astype(jnp.int32))
+    return jax.lax.scan(step, state, ff_currents.astype(jnp.int32))
+
+
+def int_layer_window_from_currents(
+    cfg: LayerConfig, params: IntLayerParams, ff_currents
+) -> jax.Array:
+    """Run one layer over a window of *precomputed* FF integration currents.
+
+    ``ff_currents``: int32 [T, batch, n_out], the per-step feed-forward
+    accumulation ``s_t @ w_ff`` (however it was computed -- this is the seam
+    the event-driven backend uses to feed sparse-gathered currents into the
+    exact step dynamics).  The scan adds recurrent contributions and runs
+    phase B per step, so *every* neuron model / topology / reset mode is
+    covered with numerics identical to :func:`int_layer_step`.
+    """
+    state0 = int_layer_init(cfg, ff_currents.shape[1])
+    _, spikes = int_layer_window_carry(cfg, params, state0, ff_currents)
     return spikes
 
 

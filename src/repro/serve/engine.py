@@ -1,4 +1,4 @@
-"""Batched serving engine: continuous batching over fixed cache slots.
+"""Batched LM serving engine: continuous batching over fixed cache slots.
 
 The inference-side driver for the decode_* dry-run shapes, runnable at
 reduced scale on CPU: a fixed pool of ``max_batch`` cache slots; incoming
@@ -8,8 +8,12 @@ free their slots immediately (continuous batching -- no head-of-line
 blocking on long generations).
 
 Weights can be served quantized through the paper's precision machinery
-(``PrecisionPolicy``), which is how the decode memory roofline in
-EXPERIMENTS.md section Perf is driven down.
+(``PrecisionPolicy``), which is how the LM decode memory roofline is
+driven down -- measured in ``EXPERIMENTS.md#perf`` ("LM decode memory
+roofline" bullet).  The SNN-side counterpart -- the paper's actual
+workload served the same continuous-batching way -- is
+``repro.serve.snn_engine``; both engines are documented side by side in
+``docs/SERVING.md``.
 """
 
 from __future__ import annotations

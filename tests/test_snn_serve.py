@@ -1,0 +1,401 @@
+"""Serving correctness: the continuous-batching SNN service is bit-exact.
+
+The engine is an *execution strategy*, not a numerics change: every request
+served through the lane pool (any chunking, any admission order, any window
+length) or through the event admission route must produce outputs
+bit-identical to a serial single-sample ``run_int``.  Plus the scheduling
+contracts: lanes free immediately on completion, and a short request is
+admitted (and completes) while a long one is still in flight -- no
+head-of-line blocking.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import run_int_batched
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+    run_int,
+)
+from repro.core.snn_layer import (
+    LayerConfig,
+    NeuronModel,
+    ResetMode,
+    Topology,
+)
+from repro.serve.snn_engine import AsyncSNNServer, SNNRequest, SNNServeEngine
+
+BACKENDS = ["reference", "fused", "event"]
+
+
+def _make_net(topology=Topology.FF, neuron=NeuronModel.LIF, n_in=24, T=9):
+    return NetworkConfig(
+        layers=(
+            LayerConfig(n_in=n_in, n_out=12, neuron=neuron, topology=topology,
+                        reset=ResetMode.SUBTRACT, beta=0.9),
+            LayerConfig(n_in=12, n_out=5, neuron=neuron, reset=ResetMode.ZERO,
+                        beta=0.77),
+        ),
+        n_steps=T,
+    )
+
+
+def _quantized(net, seed=0):
+    params = init_float_params(jax.random.PRNGKey(seed), net)
+    qparams, _ = quantize_params(net, params)
+    return qparams
+
+
+def _rasters(net, lengths, seed=1, rate=0.3):
+    rng = np.random.default_rng(seed)
+    return [(rng.random((T, net.n_in)) < rate).astype(np.int32) for T in lengths]
+
+
+def _serial(net, qparams, raster):
+    return run_int(net, qparams, jnp.asarray(np.asarray(raster)[:, None, :], jnp.int32))
+
+
+def _assert_request_matches_serial(net, qparams, req):
+    rec = _serial(net, qparams, req.raster)
+    np.testing.assert_array_equal(req.spike_counts, np.asarray(rec.spike_counts)[0])
+    assert req.prediction == int(np.asarray(rec.predictions())[0])
+    stats = req.event_stats
+    ref_stats = rec.event_stats()
+    np.testing.assert_allclose(
+        stats["input_events_per_step"], ref_stats["input_events_per_step"]
+    )
+    for got, want in zip(stats["layer_events_per_step"], ref_stats["layer_events_per_step"]):
+        np.testing.assert_allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# run_int_batched: the ragged whole-window seam
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "topology,neuron",
+    [
+        (Topology.FF, NeuronModel.LIF),
+        (Topology.ATA_T, NeuronModel.LIF),
+        (Topology.FF, NeuronModel.SYNAPTIC),
+    ],
+    ids=["ff", "ata_t", "synaptic"],
+)
+def test_run_int_batched_matches_serial_ragged(topology, neuron):
+    """Every per-sample slice of a ragged batched run == serial run_int."""
+    net = _make_net(topology=topology, neuron=neuron)
+    qparams = _quantized(net)
+    lengths = [9, 4, 13, 1, 7]
+    rasters = _rasters(net, lengths)
+    T_max = max(lengths)
+    padded = np.zeros((T_max, len(rasters), net.n_in), np.int32)
+    for b, r in enumerate(rasters):
+        padded[: len(r), b] = r
+    rec = run_int_batched(net, qparams, padded, lengths)
+    for b, r in enumerate(rasters):
+        ser = _serial(net, qparams, r)
+        np.testing.assert_array_equal(
+            np.asarray(rec.spike_counts)[b], np.asarray(ser.spike_counts)[0]
+        )
+        for l in range(len(net.layers)):
+            got = np.asarray(rec.layer_spikes[l])[:, b]
+            np.testing.assert_array_equal(got[: lengths[b]], np.asarray(ser.layer_spikes[l])[:, 0])
+            assert not got[lengths[b]:].any()  # masked past the window
+        np.testing.assert_array_equal(
+            np.asarray(rec.input_events)[: lengths[b], b],
+            np.asarray(ser.input_events)[:, 0],
+        )
+
+
+def test_run_int_batched_full_length_default():
+    net = _make_net()
+    qparams = _quantized(net)
+    rasters = _rasters(net, [9, 9, 9])
+    stacked = np.stack(rasters, axis=1)
+    rec = run_int_batched(net, qparams, stacked)
+    ref = run_int(net, qparams, jnp.asarray(stacked))
+    np.testing.assert_array_equal(
+        np.asarray(rec.spike_counts), np.asarray(ref.spike_counts)
+    )
+
+
+def test_batched_lane_tick_iterates_to_reference():
+    """Single-step lane ticks chained by hand == one reference window."""
+    from repro.core.backend import batched_lane_init, batched_lane_tick
+
+    net = _make_net()
+    qparams = _quantized(net)
+    raster = np.stack(_rasters(net, [9, 9]), axis=1)  # [T, 2, n_in]
+    states = batched_lane_init(net, 2)
+    reset = jnp.asarray([True, True])
+    outs = []
+    for t in range(raster.shape[0]):
+        states, out, _ = batched_lane_tick(
+            net, qparams, states, jnp.asarray(raster[t]), reset
+        )
+        reset = jnp.asarray([False, False])
+        outs.append(np.asarray(out))
+    ref = run_int(net, qparams, jnp.asarray(raster))
+    np.testing.assert_array_equal(
+        np.sum(outs, axis=0), np.asarray(ref.spike_counts)
+    )
+
+
+# ---------------------------------------------------------------------------
+# SNNServeEngine: bit-exactness across backends, chunkings, admission orders
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_bit_exact_per_request(backend):
+    """Batched-service outputs == serial run_int for every request, on every
+    registered backend (mixed window lengths and densities force lane reuse,
+    mid-chunk completions, and -- for event -- both admission routes)."""
+    net = _make_net()
+    qparams = _quantized(net)
+    lengths = [9, 4, 13, 7, 2, 9, 5, 11]
+    rasters = _rasters(net, lengths, rate=0.3)
+    rasters[2] = (np.random.default_rng(9).random((13, net.n_in)) < 0.03).astype(np.int32)
+    engine = SNNServeEngine(net, qparams, max_batch=3, backend=backend)
+    done = engine.run([SNNRequest(uid=i, raster=r) for i, r in enumerate(rasters)])
+    assert len(done) == len(rasters) == engine.n_served
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+@pytest.mark.parametrize("tick_stride", [1, 4, None])
+def test_engine_bit_exact_across_chunkings(tick_stride):
+    """Chunk size is a scheduling knob, never a numerics knob."""
+    net = _make_net()
+    qparams = _quantized(net)
+    rasters = _rasters(net, [9, 6, 9, 3])
+    engine = SNNServeEngine(net, qparams, max_batch=2, tick_stride=tick_stride)
+    done = engine.run([SNNRequest(uid=i, raster=r) for i, r in enumerate(rasters)])
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_engine_f32_exact_ff_path_is_bit_exact():
+    """Binary-spike workloads take the f32 BLAS feed-forward path; the
+    2**24 exact-integer bound makes it bit-identical to int32."""
+    net = _make_net(n_in=24)
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=4)
+    assert engine._f32_input_max >= 1  # binary inputs qualify on this net
+    rasters = _rasters(net, [9, 9, 5, 12, 9])
+    done = engine.run([SNNRequest(uid=i, raster=r) for i, r in enumerate(rasters)])
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_engine_int32_fallback_for_large_values():
+    """A request with spike values past the f32-exact bound still serves
+    bit-exactly through the int32 path."""
+    net = _make_net(n_in=24)
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2)
+    big = np.zeros((6, net.n_in), np.int64)
+    big[::2, ::3] = engine._f32_input_max + 7  # forces ff_mode="int32"
+    rasters = [big] + _rasters(net, [9, 7])
+    done = engine.run([SNNRequest(uid=i, raster=r) for i, r in enumerate(rasters)])
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_warmup_leaves_engine_clean():
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2, backend="event")
+    engine.warmup()
+    assert not engine.in_flight and engine.n_served == 0
+    done = engine.run([SNNRequest(uid=0, raster=_rasters(net, [9])[0])])
+    _assert_request_matches_serial(net, qparams, done[0])
+
+
+# ---------------------------------------------------------------------------
+# Scheduling contracts
+# ---------------------------------------------------------------------------
+
+
+def test_lanes_free_on_completion():
+    """A finished request frees its lane immediately; the pool drains to
+    empty and every lane is reused across the run."""
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2)
+    for i, r in enumerate(_rasters(net, [9, 9, 9, 9, 9, 9])):
+        engine.submit(SNNRequest(uid=i, raster=r))
+    seen_free_again = False
+    done = []
+    while engine.in_flight:
+        done.extend(engine.poll())
+        if done and engine.queue:
+            # completions freed capacity while work was still queued:
+            # the next poll must be able to admit into the freed lane
+            seen_free_again = True
+    assert len(done) == 6
+    assert engine.active_lanes == 0 and engine.free_lanes == engine.max_batch
+    assert seen_free_again
+    # 6 requests through 2 lanes: lane reuse is the only way this drains
+    assert engine.n_served == 6
+
+
+def test_no_head_of_line_blocking():
+    """A short request admitted alongside a long one completes first and its
+    lane is rewarded to a later request while the long one is still running."""
+    net = _make_net()
+    qparams = _quantized(net)
+    long_raster = _rasters(net, [40], seed=2)[0]
+    short_a, short_b = _rasters(net, [6, 6], seed=3)
+    engine = SNNServeEngine(net, qparams, max_batch=2, tick_stride=4)
+    long_req = SNNRequest(uid=0, raster=long_raster)
+    a = SNNRequest(uid=1, raster=short_a)
+    b = SNNRequest(uid=2, raster=short_b)
+    engine.submit(long_req)
+    engine.submit(a)
+    engine.submit(b)  # queued: both lanes busy
+    order = []
+    admitted_b_while_long_running = False
+    while engine.in_flight:
+        finished = engine.poll()
+        order.extend(r.uid for r in finished)
+        if not long_req.done and not engine.queue and b in [
+            lane.req for lane in engine._lanes if lane is not None
+        ]:
+            admitted_b_while_long_running = True
+    assert order[0] == 1  # short A finished first
+    assert order[-1] == 0  # the long request finished last
+    assert admitted_b_while_long_running  # B ran concurrently with the long one
+    for req in (long_req, a, b):
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_event_admission_routing():
+    """backend='event': sparse requests take the event backend's sparse
+    path, dense ones the lane pool; both stay bit-exact."""
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(
+        net, qparams, max_batch=2, backend="event", sparse_admission_threshold=0.10
+    )
+    rng = np.random.default_rng(5)
+    sparse = (rng.random((9, net.n_in)) < 0.02).astype(np.int32)
+    dense = (rng.random((9, net.n_in)) < 0.40).astype(np.int32)
+    done = engine.run(
+        [SNNRequest(uid=0, raster=sparse), SNNRequest(uid=1, raster=dense)]
+    )
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].route.startswith("event-")
+    assert by_uid[1].route == "lanes"
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_sparse_request_bypasses_full_lane_pool():
+    """With lanes full, an event-routable request deeper in the queue is
+    served through its direct route instead of waiting behind a dense one."""
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(
+        net, qparams, max_batch=1, backend="event",
+        sparse_admission_threshold=0.10, tick_stride=4,
+    )
+    rng = np.random.default_rng(7)
+    dense = [(rng.random((20, net.n_in)) < 0.4).astype(np.int32) for _ in range(2)]
+    sparse = (rng.random((9, net.n_in)) < 0.02).astype(np.int32)
+    engine.submit(SNNRequest(uid=0, raster=dense[0]))  # takes the only lane
+    engine.submit(SNNRequest(uid=1, raster=dense[1]))  # waits for the lane
+    engine.submit(SNNRequest(uid=2, raster=sparse))  # must not wait behind it
+    first = engine.poll()
+    assert [r.uid for r in first] == [2]  # sparse served on the first round
+    assert engine.queue[0].uid == 1  # dense FIFO preserved
+    done = first + engine.drain()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_non_event_backend_never_routes_to_event():
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2, backend="fused")
+    sparse = (np.random.default_rng(6).random((9, net.n_in)) < 0.02).astype(np.int32)
+    done = engine.run([SNNRequest(uid=0, raster=sparse)])
+    assert done[0].route == "lanes"
+
+
+# ---------------------------------------------------------------------------
+# Reporting and API contracts
+# ---------------------------------------------------------------------------
+
+
+def test_per_request_latency_and_design_report():
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2)
+    done = engine.run(
+        [SNNRequest(uid=i, raster=r) for i, r in enumerate(_rasters(net, [9, 5]))]
+    )
+    from repro.core import hw_model
+
+    for req in done:
+        assert req.latency_s is not None and req.latency_s > 0
+        assert req.service_s is not None and 0 < req.service_s <= req.latency_s + 1e-9
+        dp = req.design
+        assert dp.latency_s > 0 and dp.energy_per_image_j > 0
+        # the lazily derived design point == design_point at the serial
+        # record's measured traffic (same stats, same model)
+        ser = _serial(net, qparams, req.raster)
+        want = hw_model.design_point(net, hw_model.EventTraffic.from_record(ser))
+        assert dp.latency_s == pytest.approx(want.latency_s)
+        assert dp.energy_per_image_j == pytest.approx(want.energy_per_image_j)
+
+
+def test_report_design_point_off():
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2, report_design_point=False)
+    done = engine.run([SNNRequest(uid=0, raster=_rasters(net, [9])[0])])
+    assert done[0].event_stats is None and done[0].design is None
+    assert done[0].prediction is not None
+
+
+def test_request_and_engine_validation():
+    net = _make_net()
+    qparams = _quantized(net)
+    with pytest.raises(ValueError, match="max_batch"):
+        SNNServeEngine(net, qparams, max_batch=0)
+    with pytest.raises(ValueError, match="tick_stride"):
+        SNNServeEngine(net, qparams, tick_stride=0)
+    with pytest.raises(ValueError, match="sparse_admission_threshold"):
+        SNNServeEngine(net, qparams, sparse_admission_threshold=1.5)
+    with pytest.raises(ValueError, match="raster must be"):
+        SNNRequest(uid=0, raster=np.zeros((3,), np.int32))
+    engine = SNNServeEngine(net, qparams, max_batch=2)
+    with pytest.raises(ValueError, match="channels"):
+        engine.submit(SNNRequest(uid=0, raster=np.zeros((4, net.n_in + 1), np.int32)))
+
+
+def test_async_server_resolves_futures():
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(net, qparams, max_batch=2)
+    rasters = _rasters(net, [9, 4, 7])
+
+    async def main():
+        server = AsyncSNNServer(engine)
+        return await server.serve(
+            [SNNRequest(uid=i, raster=r) for i, r in enumerate(rasters)]
+        )
+
+    done = asyncio.run(main())
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
