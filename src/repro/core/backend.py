@@ -74,6 +74,11 @@ ragged batch of variable-length samples through one jitted scan.  Each lane's
 trajectory is bit-exact with a serial single-sample ``run_int``: the step
 dynamics are elementwise/matmul over the batch axis, so batching lanes is
 semantically a ``jax.vmap`` of the single-sample step.
+
+Both batching axes (samples here, candidates in the population sweep) are
+*independent* work, which is what lets ``repro.core.shard`` spread them
+across devices bit-exactly -- see that module for the multi-device
+execution layer built on these entry points.
 """
 
 from __future__ import annotations
@@ -825,7 +830,7 @@ def _run_int_batched_jit(net, qparams, rasters, lengths):
     return counts, emitted, input_events
 
 
-def run_int_batched(net, qparams, rasters, lengths=None) -> SimRecord:
+def run_int_batched(net, qparams, rasters, lengths=None, mesh=None) -> SimRecord:
     """One vmap-batched run over a ragged batch of variable-length samples.
 
     ``rasters`` int [T_max, B, n_in], each sample zero-padded to the longest
@@ -842,7 +847,15 @@ def run_int_batched(net, qparams, rasters, lengths=None) -> SimRecord:
     batches *candidates* with one compiled program, this batches *samples*.
     Per-sample record views: ``spike_counts[b]``, ``layer_spikes[l][:Tb, b]``,
     ``input_events[:Tb, b]``.
+
+    ``mesh`` (``None`` | ``"auto"`` | int | ``repro.core.shard.DeviceMesh``)
+    spreads the sample axis across devices via ``shard_map`` -- still
+    bit-exact per sample (lanes are independent); see ``repro.core.shard``.
     """
+    if mesh is not None:
+        from repro.core import shard as shard_lib  # deferred: shard imports us
+
+        return shard_lib.run_int_batched_sharded(net, qparams, rasters, lengths, mesh)
     rasters = jnp.asarray(rasters).astype(jnp.int32)
     T, B, _ = rasters.shape
     if lengths is None:

@@ -155,6 +155,7 @@ def simulated_annealing_population(
     anneal: AnnealConfig = AnnealConfig(),
     population: int = 8,
     extra_cost_fn: Callable[[tuple], float] | None = None,
+    fill_width: int | None = None,
 ) -> AnnealResult:
     """Population-parallel annealing: propose/accept per population step.
 
@@ -177,11 +178,18 @@ def simulated_annealing_population(
     up front; this extends the same idea to the expensive accuracy term,
     adaptively.)
 
+    ``fill_width`` (default: ``population``) is the width the speculative
+    fill targets.  A sharded evaluator sweeps ``ceil(width / n_devices)``
+    candidates per device whatever the batch holds, so the explorer widens
+    the fill to the device multiple -- spare device lanes then score fresh
+    candidates instead of shard padding.
+
     Returns the same :class:`AnnealResult` shape as
     :func:`simulated_annealing` (best incumbent across all walkers).
     """
     if population < 1:
         raise ValueError(f"population must be >= 1, got {population}")
+    fill_width = population if fill_width is None else max(fill_width, population)
     names, cfgs = enumerate_configs(knobs)
     knob_values = [list(v) for v in knobs.values()]
     rng = np.random.default_rng(anneal.seed)
@@ -196,11 +204,11 @@ def simulated_annealing_population(
         fresh = [c for c in dict.fromkeys(batch) if c not in cache]
         if not fresh:
             return
-        if len(fresh) < population:
+        if len(fresh) < fill_width:
             # speculative fill: score unseen candidates in the spare lanes
             seen = cache.keys() | set(fresh)
             pool = [c for c in cfgs if c not in seen]
-            order = rng.permutation(len(pool))[: population - len(fresh)]
+            order = rng.permutation(len(pool))[: fill_width - len(fresh)]
             fresh += [pool[i] for i in order]
         accs = batch_acc_fn(fresh)
         for cfg, accuracy in zip(fresh, accs):

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import backend as backend_lib
 from repro.core import hw_model
+from repro.core import shard as shard_lib
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.flexplorer import cost as cost_lib
 from repro.core.network import NetworkConfig, quantize_params, run_int
@@ -78,6 +79,7 @@ def explore_snn(
     backend="reference",
     population: int = 0,
     perf_targets: cost_lib.PerfTargets = cost_lib.PerfTargets(),
+    mesh=None,
 ) -> ExplorationResult:
     """Anneal precision knobs for a trained SNN (the paper's Explorer stage).
 
@@ -86,6 +88,13 @@ def explore_snn(
     candidates through its own vmapped dynamic-register sweep (still
     bit-exact) and therefore *overrides* ``backend`` -- a warning is issued
     if a non-default backend is requested alongside it.
+
+    ``mesh`` (``None`` | ``"auto"`` | int | ``repro.core.shard.DeviceMesh``)
+    spreads evaluation across devices without moving any score: serial mode
+    shards each candidate's *sample* axis, population mode fans the
+    *candidate* axis out (each device sweeps a slice of the population),
+    and the speculative lane fill widens to the device multiple so every
+    sweep ships full shards of fresh candidates (see ``repro.core.shard``).
 
     When ``weights.c_perf > 0`` the objective gains an event-aware perf
     term: each candidate's simulated event traffic (measured during the same
@@ -105,6 +114,11 @@ def explore_snn(
             f"{getattr(backend, 'name', backend)!r} is ignored",
             stacklevel=2,
         )
+    dmesh = shard_lib.resolve_mesh(mesh)
+    n_shards = dmesh.n_shards if dmesh is not None else 1
+    # Population sweeps ship whole shards: round the sweep width up so the
+    # spare lanes carry speculative candidates instead of shard padding.
+    sweep_width = -(-population // n_shards) * n_shards if population else 0
     use_perf = weights.c_perf > 0
     any_recurrent = any(lc.is_recurrent for lc in net.layers)
     knobs = {"ff_bits": list(space.ff_bits)}
@@ -129,16 +143,17 @@ def explore_snn(
     stats_stash: dict = {}
 
     def acc_fn(cfg: tuple) -> float:
-        cand = cfg_to_net(cfg)
-        qparams, _ = quantize_params(cand, float_params)
+        cand, qparams = quantized(cfg)
         if use_perf:
             acc, stats = eval_int(
                 cand, qparams, eval_ds, batch_size=eval_batch,
-                return_stats=True, backend=backend,
+                return_stats=True, backend=backend, mesh=dmesh,
             )
             stats_stash[cfg] = stats
             return acc
-        return eval_int(cand, qparams, eval_ds, batch_size=eval_batch, backend=backend)
+        return eval_int(
+            cand, qparams, eval_ds, batch_size=eval_batch, backend=backend, mesh=dmesh
+        )
 
     qp_cache: dict = {}
 
@@ -151,19 +166,22 @@ def explore_snn(
         return qp_cache[cfg]
 
     def batch_acc_fn(cfg_batch: list) -> np.ndarray:
-        # Pad to the fixed population width so the jitted vmapped program is
-        # compiled once and reused for every anneal step.
-        padded = list(cfg_batch) + [cfg_batch[-1]] * (population - len(cfg_batch))
+        # Pad to the fixed sweep width (population rounded up to the device
+        # multiple) so the jitted vmapped program is compiled once and
+        # reused -- and every shard of every sweep is full.
+        padded = list(cfg_batch) + [cfg_batch[-1]] * (sweep_width - len(cfg_batch))
         nets, qps = zip(*(quantized(c) for c in padded))
         if use_perf:
             accs, stats = eval_int_population(
                 net, list(nets), list(qps), eval_ds, batch_size=eval_batch,
-                return_stats=True,
+                return_stats=True, mesh=dmesh,
             )
             for c, s in zip(padded, stats):
                 stats_stash[c] = s
         else:
-            accs = eval_int_population(net, list(nets), list(qps), eval_ds, batch_size=eval_batch)
+            accs = eval_int_population(
+                net, list(nets), list(qps), eval_ds, batch_size=eval_batch, mesh=dmesh
+            )
         return accs[: len(cfg_batch)]
 
     def acc_cost_fn(accuracy: float) -> float:
@@ -179,13 +197,14 @@ def explore_snn(
     if population and population > 1:
         result = annealer_lib.simulated_annealing_population(
             knobs, hw_cost_fn, batch_acc_fn, acc_cost_fn, anneal_cfg, population,
-            extra_cost_fn=extra_cost_fn,
+            extra_cost_fn=extra_cost_fn, fill_width=sweep_width,
         )
     else:
         result = annealer_lib.simulated_annealing(
             knobs, hw_cost_fn, acc_fn, acc_cost_fn, anneal_cfg,
             extra_cost_fn=extra_cost_fn,
         )
-    best_net = cfg_to_net(result.best)
-    best_qparams, _ = quantize_params(best_net, float_params)
+    # every scored candidate passed through quantized(); the best's entry is
+    # guaranteed cached, so closing out costs no host-side requantization
+    best_net, best_qparams = quantized(result.best)
     return ExplorationResult(best_net=best_net, best_qparams=best_qparams, anneal=result, weights=weights)

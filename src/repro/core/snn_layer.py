@@ -162,13 +162,15 @@ def _rec_weight_shape(cfg: LayerConfig):
 
 
 def int_layer_init(cfg: LayerConfig, batch: int) -> LayerState:
-    z = jnp.zeros((batch, cfg.n_out), jnp.int32)
-    return LayerState(u=z, i_syn=z, prev_spk=z)
+    # Three distinct buffers, not one shared zeros array: serving donates
+    # the lane-carry state, and XLA rejects donating an aliased buffer twice.
+    z = lambda: jnp.zeros((batch, cfg.n_out), jnp.int32)
+    return LayerState(u=z(), i_syn=z(), prev_spk=z())
 
 
 def float_layer_init(cfg: LayerConfig, batch: int) -> LayerState:
-    z = jnp.zeros((batch, cfg.n_out), jnp.float32)
-    return LayerState(u=z, i_syn=z, prev_spk=z)
+    z = lambda: jnp.zeros((batch, cfg.n_out), jnp.float32)
+    return LayerState(u=z(), i_syn=z(), prev_spk=z())
 
 
 def _integrate_acc(cfg: LayerConfig, params: IntLayerParams, state: LayerState, ff_acc):

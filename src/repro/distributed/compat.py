@@ -22,7 +22,7 @@ except ImportError:  # older jax: experimental namespace
 
 _SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
 
-__all__ = ["shard_map", "pcast_varying"]
+__all__ = ["shard_map", "pcast_varying", "enable_compilation_cache"]
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kwargs):
@@ -37,6 +37,40 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kwargs)
     else:
         kwargs["check_rep"] = check_vma
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def enable_compilation_cache(cache_dir) -> bool:
+    """Point jax's persistent compilation cache at ``cache_dir`` (opt-in).
+
+    Repeated bench/serve runs then skip recompiles of unchanged programs
+    across *processes* -- the in-process jit cache only lives as long as the
+    interpreter.  The threshold knobs are dropped to zero where they exist
+    (our chunk programs are small and compile fast, exactly the entries the
+    defaults would decline to persist).  Returns False on jax versions
+    without the cache config; callers treat that as "not enabled".
+    """
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    except AttributeError:  # pragma: no cover - ancient jax
+        return False
+    for knob, value in (
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+        ("jax_persistent_cache_min_entry_size_bytes", 0),
+    ):
+        try:
+            jax.config.update(knob, value)
+        except AttributeError:  # knob not in this jax: keep its default
+            pass
+    try:
+        # the cache backend latches "absent" on the first compile of the
+        # process; a process that already compiled something must reset it
+        # for the new directory to take effect
+        from jax._src import compilation_cache as _cc
+
+        _cc.reset_cache()
+    except (ImportError, AttributeError):  # pragma: no cover - internal API
+        pass
+    return True
 
 
 def pcast_varying(x, axis_name: str):

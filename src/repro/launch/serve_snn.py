@@ -52,6 +52,12 @@ def main():
     ap.add_argument("--density", type=float, default=None,
                     help="Bernoulli raster density instead of mnist-like requests")
     ap.add_argument("--sparse-threshold", type=float, default=0.10)
+    ap.add_argument("--data-parallel", type=int, default=None,
+                    help="shard the lane pool across this many devices "
+                    "(clamped to what exists; must divide --max-batch)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jax compilation cache directory "
+                    "(restarted engines skip the warmup compiles)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,6 +70,7 @@ def main():
         max_batch=args.max_batch,
         backend=args.backend,
         sparse_admission_threshold=args.sparse_threshold,
+        data_parallel=args.data_parallel,
     )
 
     rng = np.random.default_rng(args.seed)
@@ -87,7 +94,7 @@ def main():
 
     # precompile the chunk programs + the event route so the report
     # reflects steady-state service, not jit compilation
-    engine.warmup(args.T)
+    engine.warmup(args.T, compilation_cache_dir=args.compile_cache)
 
     done = engine.run(requests)
     lat = np.asarray([r.latency_s for r in done]) * 1e3

@@ -28,13 +28,22 @@ at a time through ``run_int``:
   event stats feed ``hw_model.design_point`` exactly as a batch run's
   ``event_stats()`` would.
 
+* ``data_parallel=N`` partitions the lane pool into per-device **shards**
+  (``repro.core.shard.wrap_lane_window``): lane state stays resident on
+  its device across ticks, one jitted tick advances every shard, and
+  admission stays a global host-side decision -- the lane index *is* the
+  placement.  Numerics never move (lanes are independent), so sharding is
+  purely a throughput knob for per-tick compute large enough to cover the
+  extra dispatch.
+
 ``SNNServeEngine.run`` replays an offered-load schedule (open loop:
 requests become visible at ``arrival_s`` offsets); ``submit``/``tick``
 expose the loop for callers that drive it themselves; and
 :class:`AsyncSNNServer` is an asyncio facade whose ``submit`` resolves a
 future on completion.  Throughput/latency vs serial ``run_int`` is measured
-by ``benchmarks/serve_bench.py`` (``BENCH_serve.json``); the serving story
-is documented in ``docs/SERVING.md``.
+by ``benchmarks/serve_bench.py`` (``BENCH_serve.json``), multi-device lane
+sharding by ``benchmarks/shard_bench.py`` (``BENCH_shard.json``); the
+serving story is documented in ``docs/SERVING.md``.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hw_model
+from repro.core import shard as shard_lib
 from repro.core.fixed_point import int_max
 from repro.core.backend import (
     EventBackend,
@@ -60,6 +70,7 @@ from repro.core.backend import (
     get_backend,
 )
 from repro.core.network import NetworkConfig, run_int
+from repro.distributed.compat import enable_compilation_cache
 
 __all__ = ["SNNRequest", "SNNServeEngine", "AsyncSNNServer"]
 
@@ -164,8 +175,10 @@ class SNNRequest:
         return self._design
 
 
-@functools.partial(jax.jit, static_argnames=("net", "ff_mode"))
-def _lane_window_packed(net, qparams, states, x_chunk, lane_meta, ff_mode):
+@functools.partial(
+    jax.jit, static_argnames=("net", "ff_mode", "dmesh"), donate_argnums=(2,)
+)
+def _lane_window_packed(net, qparams, states, x_chunk, lane_meta, ff_mode, dmesh=None):
     """``batched_lane_window`` with packed aux input and packed output.
 
     Serving throughput on CPU/edge hosts is bounded by host<->device
@@ -174,18 +187,28 @@ def _lane_window_packed(net, qparams, states, x_chunk, lane_meta, ff_mode):
     final-layer spikes + per-layer emitted counts come back as one
     [k, n_lanes, n_classes + n_layers] array -- two crossings per tick
     instead of four.
+
+    The lane-carry ``states`` buffers are donated: the pool's previous
+    state is dead the moment a tick returns (the engine rebinds it), so XLA
+    reuses those buffers for the new state instead of allocating a fresh
+    pool every tick.
+
+    ``dmesh`` (static) partitions the lane axis across a device mesh: each
+    device owns ``n_lanes / n_shards`` resident lanes and one dispatch
+    advances every shard (see ``repro.core.shard.wrap_lane_window``).
+    ``None`` keeps the single-device program.
     """
-    states, out, emitted = batched_lane_window(
-        net,
-        qparams,
-        states,
-        x_chunk,
-        lane_meta[0] != 0,
-        valid_steps=lane_meta[1],
-        ff_mode=ff_mode,
-    )
-    packed = jnp.concatenate([out, jnp.transpose(emitted, (0, 2, 1))], axis=-1)
-    return states, packed
+
+    def body(qp, st, x, meta):
+        st, out, emitted = batched_lane_window(
+            net, qp, st, x, meta[0] != 0, valid_steps=meta[1], ff_mode=ff_mode
+        )
+        packed = jnp.concatenate([out, jnp.transpose(emitted, (0, 2, 1))], axis=-1)
+        return st, packed
+
+    if dmesh is not None and dmesh.n_shards > 1:
+        body = shard_lib.wrap_lane_window(body, dmesh)
+    return body(qparams, states, x_chunk, lane_meta)
 
 
 @dataclasses.dataclass
@@ -225,6 +248,17 @@ class SNNServeEngine:
     ``report_design_point=False`` skips attaching per-request event stats
     (and therefore the lazily derived ``req.design`` hardware operating
     point) for pure-throughput deployments.
+
+    ``data_parallel`` partitions the lane pool into per-device shards:
+    lanes ``[i * max_batch/n, (i+1) * max_batch/n)`` are resident on device
+    ``i``, one jitted tick advances every shard, and admission stays a
+    global host-side decision (a request lands on whichever lane is free;
+    the lane index *is* the placement).  ``max_batch`` must divide evenly.
+    Requests for more devices than exist clamp down -- on a single-device
+    host this degrades to the unsharded engine, bit-exactly.  Routing and
+    numerics are unchanged: lanes never interact, so the sharded pool's
+    trajectories are identical to the serial pool's (asserted by the serve
+    parity tests).
     """
 
     def __init__(
@@ -237,9 +271,12 @@ class SNNServeEngine:
         sparse_admission_threshold: float = 0.10,
         tick_stride: int | None = 32,
         report_design_point: bool = True,
+        data_parallel: int | None = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if data_parallel is not None and data_parallel < 1:
+            raise ValueError(f"data_parallel must be >= 1 or None, got {data_parallel}")
         if tick_stride is not None and tick_stride < 1:
             raise ValueError(f"tick_stride must be >= 1 or None, got {tick_stride}")
         if not 0.0 <= sparse_admission_threshold <= 1.0:
@@ -256,6 +293,25 @@ class SNNServeEngine:
         self.sparse_admission_threshold = sparse_admission_threshold
         self.tick_stride = tick_stride
         self.report_design_point = report_design_point
+
+        self._dmesh = None
+        if data_parallel is not None and data_parallel > 1:
+            n_avail = len(jax.devices())
+            if data_parallel <= n_avail and max_batch % data_parallel:
+                # the requested count exists but cannot split the pool: that
+                # is a config error, not something to silently reshape
+                raise ValueError(
+                    f"data_parallel={data_parallel} must divide max_batch="
+                    f"{max_batch} (lanes are split evenly across devices)"
+                )
+            # over-asks clamp down -- to the device count if it divides, else
+            # to the largest usable shard count below it
+            n = min(data_parallel, n_avail)
+            while max_batch % n:
+                n -= 1
+            if n > 1:
+                self._dmesh = shard_lib.make_mesh(n)
+        self.data_parallel = self._dmesh.n_shards if self._dmesh is not None else 1
 
         self._states = batched_lane_init(net, max_batch)
         self._lanes: list[_Lane | None] = [None] * max_batch
@@ -402,7 +458,7 @@ class SNNServeEngine:
             else "int32"
         )
         self._states, packed = _lane_window_packed(
-            self.net, self.qparams, self._states, x, meta, ff_mode
+            self.net, self.qparams, self._states, x, meta, ff_mode, self._dmesh
         )
         packed = np.asarray(packed)  # [k, n_lanes, n_classes + n_layers]
         n_classes = self.net.n_classes
@@ -441,7 +497,12 @@ class SNNServeEngine:
             req._net = self.net
         self.n_served += 1
 
-    def warmup(self, n_steps: int | None = None, include_int32: bool = False) -> None:
+    def warmup(
+        self,
+        n_steps: int | None = None,
+        include_int32: bool = False,
+        compilation_cache_dir: str | None = None,
+    ) -> None:
         """Precompile the chunk programs a typical workload will hit.
 
         Compiles the power-of-two lane-window programs up to the chunk that
@@ -455,9 +516,16 @@ class SNNServeEngine:
         Pass ``include_int32=True`` when the workload also carries graded
         or large-valued inputs, so the int32 fallback programs (both the
         int32 input dtype and ``ff_mode="int32"``) compile up front too.
+
+        ``compilation_cache_dir`` opts into jax's *persistent* compilation
+        cache before compiling, so an engine restarted with the same
+        network skips these compiles entirely on the next process
+        (``repro.distributed.compat.enable_compilation_cache``).
         """
         if self.in_flight:
             raise RuntimeError("warmup() requires an idle engine")
+        if compilation_cache_dir is not None:
+            enable_compilation_cache(compilation_cache_dir)
         T = self.net.n_steps if n_steps is None else n_steps
         cap = self._chunk_cap()
         combos = [(np.uint8, "f32_exact" if self._f32_input_max >= 1 else "int32")]
@@ -470,7 +538,7 @@ class SNNServeEngine:
                 x = np.zeros((kk, self.max_batch, self.net.n_in), dtype)
                 meta = np.zeros((2, self.max_batch), np.int32)
                 self._states, packed = _lane_window_packed(
-                    self.net, self.qparams, self._states, x, meta, ff_mode
+                    self.net, self.qparams, self._states, x, meta, ff_mode, self._dmesh
                 )
                 np.asarray(packed)
                 if kk == cap or k >= T:

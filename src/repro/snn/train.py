@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as backend_lib
+from repro.core import shard as shard_lib
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_float, run_int
 from repro.data.snn_datasets import SpikeDataset
 from repro.snn.surrogate import fast_sigmoid
@@ -125,12 +126,20 @@ def eval_float(
     surrogate_slope: float = 25.0,
     batch_size: int = 256,
     backend="reference",
+    mesh=None,
 ) -> float:
     spike_fn = fast_sigmoid(surrogate_slope)
+    dmesh = shard_lib.resolve_mesh(mesh)
 
-    @jax.jit
-    def fwd(params, spikes):
-        return run_float(net, params, spikes, spike_fn, backend=backend).predictions()
+    if dmesh is not None and dmesh.n_shards > 1:
+        def fwd(params, spikes):
+            return shard_lib.run_float_sharded(
+                net, params, spikes, spike_fn, dmesh, backend=backend
+            ).predictions()
+    else:
+        @jax.jit
+        def fwd(params, spikes):
+            return run_float(net, params, spikes, spike_fn, backend=backend).predictions()
 
     correct = total = 0
     for spikes, labels in ds.batches(batch_size):
@@ -147,6 +156,7 @@ def eval_int(
     batch_size: int = 256,
     return_stats: bool = False,
     backend="reference",
+    mesh=None,
 ):
     """Bit-exact hardware-faithful accuracy (the DSE's accuracy evaluator).
 
@@ -158,23 +168,47 @@ def eval_int(
     knob.  Backends that declare ``jit_compatible = False`` (the
     event-driven backend sizes its gather budgets from concrete spike
     counts) are called without the outer jit and compile internally.
+
+    ``mesh`` (``None`` | ``"auto"`` | int | ``repro.core.shard.DeviceMesh``)
+    spreads each batch's sample axis across devices -- bit-exact with the
+    serial path (see ``repro.core.shard``).  Backends that are not
+    jit-compatible cannot shard; they warn and run serially.
     """
     resolved = backend_lib.get_backend(backend)
+    dmesh = shard_lib.resolve_mesh(mesh)
+    if dmesh is not None and dmesh.n_shards > 1 and not resolved.jit_compatible:
+        import warnings
 
-    def fwd(spikes):
-        rec = run_int(net, qparams, spikes, backend=resolved)
-        # tolerate third-party backends that predate SimRecord.input_events
-        in_ev = rec.input_events
-        if in_ev is None:
-            in_ev = jnp.sum(spikes != 0, axis=-1)
-        return (
-            rec.predictions(),
-            [jnp.mean(s, axis=1) for s in rec.layer_spikes],
-            jnp.mean(in_ev, axis=1),
+        warnings.warn(
+            f"eval_int: backend {resolved.name!r} sizes buffers from concrete "
+            "data and cannot run under shard_map; mesh ignored",
+            stacklevel=2,
         )
+        dmesh = None
 
-    if resolved.jit_compatible:
-        fwd = jax.jit(fwd)
+    if dmesh is not None and dmesh.n_shards > 1:
+        def fwd(spikes):
+            rec = shard_lib.run_int_sharded(net, qparams, spikes, dmesh, backend=resolved)
+            return (
+                rec.predictions(),
+                [jnp.mean(s, axis=1) for s in rec.layer_spikes],
+                jnp.mean(rec.input_events, axis=1),
+            )
+    else:
+        def fwd(spikes):
+            rec = run_int(net, qparams, spikes, backend=resolved)
+            # tolerate third-party backends that predate SimRecord.input_events
+            in_ev = rec.input_events
+            if in_ev is None:
+                in_ev = jnp.sum(spikes != 0, axis=-1)
+            return (
+                rec.predictions(),
+                [jnp.mean(s, axis=1) for s in rec.layer_spikes],
+                jnp.mean(in_ev, axis=1),
+            )
+
+        if resolved.jit_compatible:
+            fwd = jax.jit(fwd)
 
     correct = total = 0
     layer_ev = None
@@ -219,6 +253,7 @@ def eval_int_population(
     ds: SpikeDataset,
     batch_size: int = 256,
     return_stats: bool = False,
+    mesh=None,
 ):
     """Bit-exact accuracies for a population of precision candidates at once.
 
@@ -236,18 +271,38 @@ def eval_int_population(
     the same shape as ``eval_int(..., return_stats=True)`` -- each
     candidate quantizes differently and therefore spikes differently, which
     is exactly what the event-aware DSE cost needs to see.
+
+    ``mesh`` spreads the *candidate* axis across devices (the DSE fan-out):
+    each device sweeps its slice of the population through the identical
+    vmapped program, so per-candidate results stay bit-exact with both the
+    one-device sweep and serial :func:`eval_int` (see ``repro.core.shard``).
     """
     backend_lib.check_population_structure(net, candidate_nets)
     stacked, beta_regs, alpha_regs = backend_lib.stack_population(
         candidate_nets, qparams_list
     )
+    dmesh = shard_lib.resolve_mesh(mesh)
+    if dmesh is not None and dmesh.n_shards > 1:
+        def pop_fwd(spikes):
+            counts, emitted = shard_lib.run_int_population_sharded(
+                net, stacked, beta_regs, alpha_regs, spikes, dmesh, return_events=True
+            )
+            return (
+                jnp.argmax(counts, axis=-1),
+                jnp.mean(emitted, axis=-1),
+                jnp.mean(jnp.sum(spikes != 0, axis=-1), axis=-1),
+            )
+    else:
+        def pop_fwd(spikes):
+            return _population_fwd(net, stacked, beta_regs, alpha_regs, spikes)
+
     P = len(candidate_nets)
     correct = np.zeros(P, np.int64)
     total = 0
     layer_ev = None  # [P, T, L] running size-weighted sum of batch means
     in_ev = None  # [T]
     for spikes, labels in ds.batches(batch_size):
-        preds, evs, iev = _population_fwd(net, stacked, beta_regs, alpha_regs, jnp.asarray(spikes))
+        preds, evs, iev = pop_fwd(jnp.asarray(spikes))
         preds = np.asarray(preds)
         correct += (preds == labels[None, :]).sum(axis=1)
         n = len(labels)

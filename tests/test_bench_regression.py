@@ -1,0 +1,82 @@
+"""--check-regression: BENCH_*.json throughput gating against baselines."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))  # benchmarks/ is a plain directory, not installed
+
+from benchmarks.run import _throughput_leaves, check_regression  # noqa: E402
+
+
+def _write(dirpath: pathlib.Path, name: str, payload: dict) -> None:
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / name).write_text(json.dumps(payload))
+
+
+BASE = {
+    "eval_int": {"reference": {"samples_per_sec": 1000.0, "seconds_per_pass": 0.5}},
+    "dse": {"serial": {"candidates_per_sec": 40.0}},
+    "offered_load": {"0.5": {"offered_rate_per_sec": 4000.0, "achieved_samples_per_sec": 900.0}},
+}
+
+
+def test_throughput_leaves_selects_rates_only():
+    leaves = _throughput_leaves(BASE)
+    assert leaves == {
+        "eval_int.reference.samples_per_sec": 1000.0,
+        "dse.serial.candidates_per_sec": 40.0,
+        "offered_load.0.5.achieved_samples_per_sec": 900.0,
+    }  # seconds_per_pass (latency) and offered_rate (an input) are excluded
+
+
+def test_check_regression_passes_within_threshold(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    _write(base_dir, "BENCH_x.json", BASE)
+    fresh = json.loads(json.dumps(BASE))
+    fresh["eval_int"]["reference"]["samples_per_sec"] = 800.0  # -20%: allowed
+    fresh["dse"]["serial"]["candidates_per_sec"] = 60.0  # improvement: fine
+    _write(fresh_dir, "BENCH_x.json", fresh)
+    assert check_regression(fresh_dir, base_dir) == []
+
+
+def test_check_regression_flags_big_drop(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    _write(base_dir, "BENCH_x.json", BASE)
+    fresh = json.loads(json.dumps(BASE))
+    fresh["eval_int"]["reference"]["samples_per_sec"] = 700.0  # -30%: regression
+    _write(fresh_dir, "BENCH_x.json", fresh)
+    problems = check_regression(fresh_dir, base_dir)
+    assert len(problems) == 1
+    assert "eval_int.reference.samples_per_sec" in problems[0]
+    # a looser threshold tolerates the same drop
+    assert check_regression(fresh_dir, base_dir, threshold=0.4) == []
+
+
+def test_check_regression_flags_missing_metric_and_file(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    _write(base_dir, "BENCH_x.json", BASE)
+    _write(base_dir, "BENCH_gone.json", {"samples_per_sec": 1.0})
+    fresh = json.loads(json.dumps(BASE))
+    del fresh["dse"]
+    _write(fresh_dir, "BENCH_x.json", fresh)
+    problems = check_regression(fresh_dir, base_dir)
+    assert any("missing from fresh report" in p for p in problems)
+    assert any("BENCH_gone.json" in p for p in problems)
+
+
+def test_check_regression_empty_baseline_dir_passes(tmp_path):
+    assert check_regression(tmp_path / "fresh", tmp_path / "nothing") == []
+
+
+def test_committed_baselines_match_committed_bench_files():
+    """The committed trajectory must gate itself: every root BENCH_*.json has
+    a baseline, and the pair passes the default threshold."""
+    baseline_dir = _ROOT / "benchmarks" / "baselines"
+    names = {p.name for p in _ROOT.glob("BENCH_*.json")}
+    assert names, "no committed BENCH_*.json artifacts?"
+    assert names == {p.name for p in baseline_dir.glob("BENCH_*.json")}
+    assert check_regression() == []

@@ -127,6 +127,19 @@ def test_elastic_mesh_roundtrip_with_checkpointer(tmp_path):
     assert restored["w"].sharding.spec == P("data", "model")
 
 
+def test_enable_compilation_cache_populates(tmp_path):
+    """Opt-in persistent jit cache: compiles land on disk, then restore off."""
+    from repro.distributed.compat import enable_compilation_cache
+
+    assert enable_compilation_cache(tmp_path)
+    try:
+        fn = jax.jit(lambda x: x * 3 + 1)
+        np.testing.assert_allclose(np.asarray(fn(jnp.arange(64.0))), np.arange(64.0) * 3 + 1)
+        assert list(tmp_path.iterdir()), "no cache entries written"
+    finally:
+        jax.config.update("jax_compilation_cache_dir", None)
+
+
 def test_ring_allgather_matmul_matches_dense():
     """Ring-overlap matmul == plain matmul (single-device ring degenerates
     to the direct product; the slicing/permute index algebra is what's
