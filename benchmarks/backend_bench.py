@@ -131,7 +131,7 @@ def run(fast: bool = False, population: int = 8):
         "population_speedup_candidates_per_sec": speedup,
         "search_wallclock_speedup": wallclock_speedup,
     }
-    rows.append((f"backend/dse-serial", serial_s * 1e6, f"cand_per_sec={serial_cps:.2f};evals={serial_evals}"))
+    rows.append(("backend/dse-serial", serial_s * 1e6, f"cand_per_sec={serial_cps:.2f};evals={serial_evals}"))
     rows.append((
         f"backend/dse-population{population}", pop_s * 1e6,
         f"cand_per_sec={pop_cps:.2f};evals={pop_evals}(requested={pop_requested})"

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.precision import quantize_weight
 from repro.kernels.quant_matmul.ref import quant_matmul_ref

@@ -20,12 +20,11 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.precision import PrecisionPolicy, quantize_tree
-from repro.distributed.structural import param_count, structural_bytes
+from repro.distributed.structural import structural_bytes
 from repro.models.registry import SHAPES, ShapeSpec, get_arch
 
 ATTN_RE = r"(wq|wk|wv|wo)$"
@@ -56,7 +55,6 @@ def run(archs=("gemma2-27b", "qwen2-moe-a2.7b", "mamba2-780m"), c_hw: float = 0.
         key = jax.random.PRNGKey(0)
         params = arch.init_params(key, cfg)
         batch = arch.input_concrete(key, tiny, cfg)
-        loss_fn = arch.loss_fn(cfg)
 
         from repro.models import transformer as tfm, whisper as whs
 

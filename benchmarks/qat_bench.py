@@ -1,0 +1,233 @@
+"""QAT benchmark: post-training quantization vs quantization-aware training.
+
+Two questions, on all three paper workloads (synthetic stand-ins):
+
+* **Accuracy at aggressive precision** -- train a float network once, then
+  for each w_bits in {2, 3, 4} compare (a) post-training quantization (PTQ:
+  ``quantize_params`` of the float weights, the paper's flow) against (b)
+  QAT fine-tuning at that precision (``qat.refine_candidates``, which
+  fine-tunes all bit-width candidates in one vmapped program and keeps each
+  candidate's best bit-exact-scored checkpoint -- epoch 0 is PTQ itself, so
+  ``qat_acc >= ptq_acc`` structurally; the interesting number is the gap).
+* **DSE front shift** -- run the Flex-plorer with ``refine_top_k`` and
+  record the explored (PTQ) Pareto front vs the refined front, plus whether
+  some refined point strictly dominates the unrefined front.
+
+Also times the float vs QAT train step (samples/sec, steady state) -- the
+``*_per_sec`` keys feed the nightly ``--check-regression`` gate.
+
+Emits ``BENCH_qat.json`` at the repo root for the perf trajectory
+(full-size runs only; ``--fast`` smoke passes write
+``experiments/BENCH_qat_fast.json`` instead) and returns the harness's
+``(name, us_per_call, derived)`` rows.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flexplorer import annealer as annealer_lib
+from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.network import NetworkConfig, init_float_params
+from repro.core.snn_layer import LayerConfig, NeuronModel, Topology
+from repro.data.snn_datasets import dvs_like, mnist_like, shd_like
+from repro.snn import qat as qat_lib
+from repro.snn.surrogate import fast_sigmoid
+from repro.snn.train import spike_count_loss, train_snn
+from repro.train import optimizer as opt_lib
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = _ROOT / "BENCH_qat.json"
+FAST_OUT = _ROOT / "experiments" / "BENCH_qat_fast.json"
+
+ANNEAL = annealer_lib.AnnealConfig(t_start=0.5, t_min=5e-2, alpha=0.6, eval_divisor=2, seed=0)
+
+
+def _workloads(fast: bool):
+    if fast:
+        return [
+            ("mnist_like", mnist_like(n=384, T=10, seed=0), Topology.FF, 64),
+        ]
+    return [
+        ("mnist_like", mnist_like(n=1536, T=20, seed=0), Topology.FF, 128),
+        ("shd_like", shd_like(n=1024, T=25, seed=1), Topology.FF, 128),
+        ("dvs_like", dvs_like(n=1024, T=20, seed=2), Topology.ATA_F, 128),
+    ]
+
+
+def _net(name: str, ds, topology: Topology, hidden: int) -> NetworkConfig:
+    T = ds.spikes.shape[1]
+    n_in = ds.spikes.shape[2]
+    mk = lambda i, o: LayerConfig(
+        n_in=i, n_out=o, neuron=NeuronModel.LIF, topology=topology, w_bits=6, u_bits=16
+    )
+    return NetworkConfig(
+        layers=(mk(n_in, hidden), mk(hidden, ds.n_classes)),
+        n_steps=T,
+        name=f"qat-{name}",
+    )
+
+
+def _time_train_steps(net, params, ds, qat_net, batch: int, repeats: int) -> tuple[float, float]:
+    """Steady-state samples/sec of one jitted train step, float vs QAT."""
+    spike_fn = fast_sigmoid(25.0)
+    optimizer = opt_lib.adamw(1e-3)
+    spikes, labels = next(ds.batches(batch))
+    spikes, labels = jnp.asarray(spikes), jnp.asarray(labels)
+
+    def step_fn(use_qat):
+        from repro.core.network import run_float
+
+        def loss(params, spikes, labels):
+            if use_qat:
+                rec = qat_lib.run_qat(qat_net, params, spikes, spike_fn)
+            else:
+                rec = run_float(net, params, spikes, spike_fn)
+            return spike_count_loss(rec.spike_counts, labels)
+
+        @jax.jit
+        def step(params, opt_state, spikes, labels):
+            grads = jax.grad(loss)(params, spikes, labels)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            return opt_lib.apply_updates(params, updates), opt_state
+
+        return step
+
+    rates = []
+    for use_qat in (False, True):
+        step = step_fn(use_qat)
+        opt_state = optimizer.init(params)
+        p, s = params, opt_state
+        p, s = step(p, s, spikes, labels)  # compile + warmup
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            p, s = step(p, s, spikes, labels)
+        jax.block_until_ready(p)
+        rates.append(repeats * int(labels.shape[0]) / (time.perf_counter() - t0))
+    return rates[0], rates[1]
+
+
+def _dominates_front(refined_points, front) -> bool:
+    """True if some refined point dominates >= 1 unrefined-front point."""
+    for r in refined_points:
+        for f in front:
+            if (
+                r["hw_cost"] <= f["hw_cost"]
+                and r["accuracy"] >= f["accuracy"]
+                and (r["hw_cost"] < f["hw_cost"] or r["accuracy"] > f["accuracy"])
+            ):
+                return True
+    return False
+
+
+def run(fast: bool = False):
+    rows = []
+    report = {"qat_vs_ptq": {}, "dse_refine": {}, "train_step": {}, "meta": {}}
+    w_bits_sweep = (3,) if fast else (2, 3, 4)
+    float_epochs = 2 if fast else 6
+    qat_epochs = 1 if fast else 6
+    refine_epochs = 1 if fast else 4
+    qat_lr = 1.5e-3
+
+    for name, ds, topology, hidden in _workloads(fast):
+        train, test = ds.split()
+        net = _net(name, ds, topology, hidden)
+        t0 = time.perf_counter()
+        res = train_snn(net, train, epochs=float_epochs, batch_size=128, lr=2e-3)
+        train_s = time.perf_counter() - t0
+
+        candidates = [
+            net.replace_precisions(w_bits=b, w_rec_bits=b) for b in w_bits_sweep
+        ]
+        t0 = time.perf_counter()
+        rr = qat_lib.refine_candidates(
+            net, candidates, res.params, train, test,
+            epochs=qat_epochs, batch_size=128, lr=qat_lr, eval_batch=512,
+        )
+        qat_s = time.perf_counter() - t0
+
+        cells = {}
+        for k, b in enumerate(w_bits_sweep):
+            ptq, qat = float(rr.base_acc[k]), float(rr.best_acc[k])
+            cells[f"w{b}"] = {
+                "ptq_acc": ptq,
+                "qat_acc": qat,
+                "delta_points": round(100 * (qat - ptq), 2),
+            }
+            rows.append(
+                (
+                    f"qat/{name}-w{b}",
+                    qat_s * 1e6 / len(w_bits_sweep),
+                    f"ptq={ptq:.4f};qat={qat:.4f}",
+                )
+            )
+        report["qat_vs_ptq"][name] = cells
+        report["meta"][name] = {
+            "float_train_seconds": round(train_s, 2),
+            "qat_refine_seconds": round(qat_s, 2),
+            "float_final_train_acc": res.history[-1]["train_acc"],
+        }
+
+        # --- DSE: explored (PTQ) front vs train-in-the-loop refined front ---
+        t0 = time.perf_counter()
+        dse = explore_snn(
+            net,
+            res.params,
+            test,
+            space=SNNSearchSpace(ff_bits=(2, 3, 4, 6), rec_bits=(2, 3, 4, 6), leak_bits=(3, 8)),
+            anneal_cfg=ANNEAL,
+            eval_batch=512,
+            refine_top_k=1 if fast else 2,
+            refine_train_ds=train,
+            refine_epochs=refine_epochs,
+            refine_lr=qat_lr,
+        )
+        dse_s = time.perf_counter() - t0
+        explored = dse.explored_front()
+        refined_pts = [r.point() for r in dse.refined]
+        dominates = _dominates_front(refined_pts, explored)
+        report["dse_refine"][name] = {
+            "explored_front": explored,
+            "refined_points": refined_pts,
+            "refined_front": dse.refined_front(),
+            "refined_dominates_explored_front": dominates,
+            "dse_seconds": round(dse_s, 2),
+            "anneal_evaluations": dse.anneal.evaluations,
+        }
+        rows.append(
+            (
+                f"qat/{name}-dse-refine",
+                dse_s * 1e6,
+                f"dominates={dominates};refined={len(refined_pts)}",
+            )
+        )
+
+    # --- train-step throughput (the nightly-gated *_per_sec metrics) ---
+    name, ds, topology, hidden = _workloads(fast)[0]
+    net = _net(name, ds, topology, hidden)
+    params = init_float_params(jax.random.PRNGKey(0), net)
+    qat_net = net.replace_precisions(w_bits=3, w_rec_bits=3)
+    f_rate, q_rate = _time_train_steps(
+        net, params, ds.split()[0], qat_net, batch=128, repeats=3 if fast else 10
+    )
+    report["train_step"] = {
+        "workload": name,
+        "batch": 128,
+        "float_train_samples_per_sec": round(f_rate, 1),
+        "qat_train_samples_per_sec": round(q_rate, 1),
+        "qat_overhead_x": round(f_rate / max(q_rate, 1e-9), 2),
+    }
+    rows.append(("qat/train-step-float", 1e6 * 128 / f_rate, f"samples_per_sec={f_rate:.1f}"))
+    rows.append(("qat/train-step-qat", 1e6 * 128 / q_rate, f"samples_per_sec={q_rate:.1f}"))
+
+    out = FAST_OUT if fast else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    rows.append(("qat/report-written", 0.0, str(out.relative_to(_ROOT))))
+    return rows

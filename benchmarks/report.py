@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import pathlib
 
 from benchmarks.roofline import DRYRUN_DIR, load_records
 

@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
                (closed-loop + offered-load p50/p99; BENCH_serve.json)
   shard     -- multi-device scaling: eval/DSE/serving at 1/2/4 forced host
                devices (worker subprocesses; BENCH_shard.json)
+  qat       -- post-training quant vs quantization-aware training accuracy
+               at w_bits 2/3/4 + refined-front DSE (BENCH_qat.json)
   roofline  -- per (arch x shape) roofline terms from the dry-run records
 
 Usage: python -m benchmarks.run [--only table1,roofline] [--fast]
@@ -38,7 +40,7 @@ import re
 import sys
 import traceback
 
-MODULES = ["cg_error", "kernels", "backend", "event", "serve", "shard", "roofline", "lm_dse", "table2", "table1", "fig11"]
+MODULES = ["cg_error", "kernels", "backend", "event", "serve", "shard", "qat", "roofline", "lm_dse", "table2", "table1", "fig11"]
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_DIR = _ROOT / "benchmarks" / "baselines"
@@ -90,6 +92,10 @@ def _rows(name: str, fast: bool):
         from benchmarks import shard_bench
 
         return shard_bench.run(fast=fast)
+    if name == "qat":
+        from benchmarks import qat_bench
+
+        return qat_bench.run(fast=fast)
     if name == "roofline":
         from benchmarks import roofline
 
@@ -181,7 +187,7 @@ def main() -> None:
         from repro.distributed.compat import enable_compilation_cache
 
         if not enable_compilation_cache(args.compile_cache):
-            print(f"# persistent compilation cache unavailable on this jax", file=sys.stderr)
+            print("# persistent compilation cache unavailable on this jax", file=sys.stderr)
 
     names = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")

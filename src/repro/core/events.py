@@ -42,7 +42,6 @@ import enum
 
 import numpy as np
 
-from repro.core import coeff_gen
 from repro.core.fixed_point import int_max, int_min
 from repro.core.snn_layer import LayerConfig, NeuronModel, ResetMode, Topology
 

@@ -20,9 +20,7 @@ and keeps the simulator's numerics well-defined for any bit-width <= 24.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -34,11 +34,18 @@ from repro.core import hw_model
 from repro.core import shard as shard_lib
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.flexplorer import cost as cost_lib
-from repro.core.network import NetworkConfig, quantize_params, run_int
+from repro.core.network import NetworkConfig, quantize_params
 from repro.data.snn_datasets import SpikeDataset
+from repro.snn import qat as qat_lib
 from repro.snn.train import eval_int, eval_int_population
 
-__all__ = ["SNNSearchSpace", "ExplorationResult", "explore_snn"]
+__all__ = [
+    "SNNSearchSpace",
+    "RefinedCandidate",
+    "ExplorationResult",
+    "pareto_front",
+    "explore_snn",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,16 +55,81 @@ class SNNSearchSpace:
     leak_bits: Sequence[int] = (3, 8)
 
 
+def pareto_front(points: Sequence[dict]) -> list[dict]:
+    """Non-dominated subset of ``{"hw_cost", "accuracy", ...}`` points.
+
+    A point dominates another when its hardware cost is <= and its accuracy
+    >= with at least one strict -- the two axes the paper's Fig.-11 trade-off
+    plot spans.  Returned sorted by ascending hardware cost.
+    """
+    front: list[dict] = []
+    for p in sorted(points, key=lambda d: (d["hw_cost"], -d["accuracy"])):
+        if not front or p["accuracy"] > front[-1]["accuracy"]:
+            front.append(p)
+    return front
+
+
+@dataclasses.dataclass
+class RefinedCandidate:
+    """One annealer finalist after QAT fine-tuning at its own precision.
+
+    ``accuracy`` is the bit-exact quantized accuracy of the refined
+    parameters (``base_accuracy`` the unrefined, post-training-quant score
+    the annealer saw -- ``accuracy >= base_accuracy`` by construction, see
+    ``qat.refine_candidates``); ``qparams`` deploy through the unchanged
+    ``eval_int`` / serving / shard paths.
+    """
+
+    cfg: tuple
+    breakdown: dict
+    net: NetworkConfig
+    qparams: list
+    params: list
+    accuracy: float
+    base_accuracy: float
+    hw_cost: float
+    total_cost: float
+    perf_cost: float = 0.0
+
+    def point(self) -> dict:
+        return {
+            "cfg": self.breakdown,
+            "hw_cost": self.hw_cost,
+            "accuracy": self.accuracy,
+            "base_accuracy": self.base_accuracy,
+            "refined": True,
+        }
+
+
 @dataclasses.dataclass
 class ExplorationResult:
     best_net: NetworkConfig
     best_qparams: list
     anneal: annealer_lib.AnnealResult
     weights: cost_lib.CostWeights
+    # second-phase QAT refinement outcomes (empty unless refine_top_k > 0);
+    # best_net/best_qparams stay the *unrefined* annealer incumbent so the
+    # paper-faithful single-phase contract is unchanged -- consumers opt in
+    # to the refined front explicitly.
+    refined: list[RefinedCandidate] = dataclasses.field(default_factory=list)
+
+    def _explored_points(self) -> list[dict]:
+        return [
+            {"cfg": t["cfg"], "hw_cost": t["hw"], "accuracy": t["accuracy"], "refined": False}
+            for t in self.anneal.trace
+        ]
+
+    def explored_front(self) -> list[dict]:
+        """Pareto front of every candidate the annealer scored (PTQ only)."""
+        return pareto_front(self._explored_points())
+
+    def refined_front(self) -> list[dict]:
+        """Pareto front over explored *and* refined points (both phases)."""
+        return pareto_front(self._explored_points() + [r.point() for r in self.refined])
 
     def report(self) -> dict:
         res = hw_model.network_resources(self.best_net)
-        return {
+        out = {
             "chosen": self.anneal.best_breakdown,
             "lut": res.lut,
             "ff": res.ff,
@@ -65,6 +137,17 @@ class ExplorationResult:
             "logic_cells": res.logic_cells,
             "evaluations": self.anneal.evaluations,
         }
+        if self.refined:
+            out["refined"] = [
+                {
+                    "cfg": r.breakdown,
+                    "accuracy": r.accuracy,
+                    "base_accuracy": r.base_accuracy,
+                    "total_cost": r.total_cost,
+                }
+                for r in self.refined
+            ]
+        return out
 
 
 def explore_snn(
@@ -80,6 +163,11 @@ def explore_snn(
     population: int = 0,
     perf_targets: cost_lib.PerfTargets = cost_lib.PerfTargets(),
     mesh=None,
+    refine_top_k: int = 0,
+    refine_train_ds: SpikeDataset | None = None,
+    refine_epochs: int = 2,
+    refine_batch: int = 128,
+    refine_lr: float = 5e-4,
 ) -> ExplorationResult:
     """Anneal precision knobs for a trained SNN (the paper's Explorer stage).
 
@@ -103,7 +191,27 @@ def explore_snn(
     paper's 1.1 ms / 0.12 mJ MNIST design point).  Lower precision changes
     spiking behaviour and therefore event counts, so the annealer sees
     realistic event-dependent latency, not worst-case dense cycles.
+
+    ``refine_top_k > 0`` adds the second *train-in-the-loop* phase: the
+    annealer's top-K finalists (Pareto-front members first, then by total
+    cost) are QAT-fine-tuned at their own candidate precisions on
+    ``refine_train_ds`` (required) -- one vmapped train step over the
+    candidate axis, fanned across ``mesh``'s devices exactly like the
+    population DSE sweep -- then re-scored with the bit-exact quantized
+    evaluator.  Cost model: each refined candidate costs roughly
+    ``refine_epochs`` extra training epochs at QAT step price (~2-3x a
+    float step); candidates train concurrently, so wall-clock scales with
+    ``ceil(K / devices)``, not K.  Results land in ``result.refined`` and
+    both fronts are available (``result.explored_front()`` /
+    ``result.refined_front()``); ``best_net``/``best_qparams`` remain the
+    unrefined incumbent.
     """
+    if refine_top_k > 0 and refine_train_ds is None:
+        raise ValueError(
+            "explore_snn: refine_top_k > 0 needs refine_train_ds (the data "
+            "the finalists are QAT-fine-tuned on; typically the training "
+            "split the float parameters came from)"
+        )
     is_default_backend = backend == "reference" or type(backend) is backend_lib.ReferenceBackend
     if population and population > 1 and not is_default_backend:
         import warnings
@@ -207,4 +315,83 @@ def explore_snn(
     # every scored candidate passed through quantized(); the best's entry is
     # guaranteed cached, so closing out costs no host-side requantization
     best_net, best_qparams = quantized(result.best)
-    return ExplorationResult(best_net=best_net, best_qparams=best_qparams, anneal=result, weights=weights)
+
+    refined: list[RefinedCandidate] = []
+    if refine_top_k > 0:
+        chosen = _select_finalists(result, refine_top_k)
+        cand_nets = [quantized(c)[0] for c in chosen]
+        rr = qat_lib.refine_candidates(
+            net,
+            cand_nets,
+            float_params,
+            refine_train_ds,
+            eval_ds,
+            epochs=refine_epochs,
+            batch_size=refine_batch,
+            lr=refine_lr,
+            seed=anneal_cfg.seed,
+            eval_batch=eval_batch,
+            mesh=dmesh,
+        )
+        for k, cfg in enumerate(chosen):
+            cand = cand_nets[k]
+            refined_params = rr.params[k]
+            qp = quantize_params(cand, refined_params)[0]
+            accuracy = float(rr.best_acc[k])
+            p_cost = 0.0
+            if use_perf:
+                # the refined parameters spike differently: re-measure traffic
+                accuracy, stats = eval_int(
+                    cand, qp, eval_ds, batch_size=eval_batch,
+                    return_stats=True, backend=backend, mesh=dmesh,
+                )
+                traffic = hw_model.EventTraffic.from_stats(stats)
+                dp = hw_model.design_point(cand, traffic)
+                p_cost = cost_lib.perf_cost(
+                    dp.latency_s, dp.energy_per_image_j, weights, perf_targets
+                )
+            hw = float(result.cache[cfg][1])
+            refined.append(
+                RefinedCandidate(
+                    cfg=cfg,
+                    breakdown=dict(zip(knobs.keys(), cfg)),
+                    net=cand,
+                    qparams=qp,
+                    params=refined_params,
+                    accuracy=float(accuracy),
+                    base_accuracy=float(rr.base_acc[k]),
+                    hw_cost=hw,
+                    total_cost=hw + float(acc_cost_fn(float(accuracy))) + p_cost,
+                    perf_cost=p_cost,
+                )
+            )
+
+    return ExplorationResult(
+        best_net=best_net,
+        best_qparams=best_qparams,
+        anneal=result,
+        weights=weights,
+        refined=refined,
+    )
+
+
+def _select_finalists(result: annealer_lib.AnnealResult, top_k: int) -> list[tuple]:
+    """The refinement shortlist: Pareto-front members first, then by cost.
+
+    Front members are where extra accuracy moves the achievable trade-off
+    outward (a refined front point dominates its own unrefined twin, so the
+    refined front is never worse); remaining slots go to the cheapest
+    non-front candidates.
+    """
+    points = [
+        {"cfg": cfg, "hw_cost": hw, "accuracy": accuracy, "total": total}
+        for cfg, (total, hw, _a, accuracy, _p) in result.cache.items()
+    ]
+    front = pareto_front(points)
+    front_cfgs = [p["cfg"] for p in sorted(front, key=lambda d: d["total"])]
+    rest = sorted(
+        (p for p in points if p["cfg"] not in set(front_cfgs)),
+        key=lambda d: d["total"],
+    )
+    order = front_cfgs + [p["cfg"] for p in rest]
+    return order[:top_k]

@@ -44,6 +44,7 @@ from repro.core.snn_layer import (
 __all__ = [
     "NetworkConfig",
     "init_float_params",
+    "layer_scale",
     "quantize_params",
     "run_float",
     "run_int",
@@ -112,10 +113,8 @@ def init_float_params(key, net: NetworkConfig) -> list[FloatLayerParams]:
     return params
 
 
-def quantize_params(
-    net: NetworkConfig, params: Sequence[FloatLayerParams]
-) -> tuple[list[IntLayerParams], list[float]]:
-    """Quantize trained float weights onto each core's fixed-point grid.
+def layer_scale(cfg, p: FloatLayerParams, w_max=None, rec_max=None) -> jax.Array:
+    """The core's float->fixed-point quantization scale, as a traced f32 scalar.
 
     One scale per core: feed-forward and recurrent contributions accumulate
     into the same register, so they must share a scale; the scale is chosen
@@ -124,22 +123,52 @@ def quantize_params(
     register* with integration headroom -- the paper's automatic
     threshold/reset rescaling.  Without (b), a narrow u_bits register can
     place theta_q above the saturation point and the core goes silent.
+
+    This is the single source of truth for the scale arithmetic: both
+    :func:`quantize_params` (deployment) and the QAT straight-through
+    forward (``repro.snn.qat``) call it, in float32 throughout, so the
+    train-time fake-quant and the deploy-time quantization round identically
+    bit for bit.  ``w_max`` / ``rec_max`` override the weight-grid maxima
+    (``int_max(w_bits)`` / ``int_max(w_rec_bits)``) with traced values --
+    the population-refinement path varies them per candidate under ``vmap``.
+    """
+    eps = jnp.float32(1e-12)
+    if w_max is None:
+        w_max = int_max(cfg.w_bits)
+    if rec_max is None:
+        rec_max = int_max(cfg.w_rec_bits)
+    w_max = jnp.asarray(w_max, jnp.float32)
+    rec_max = jnp.asarray(rec_max, jnp.float32)
+    absmax_ff = jnp.max(jnp.abs(p.w_ff.astype(jnp.float32)))
+    absmax_ff = jnp.where(absmax_ff == 0, eps, absmax_ff)
+    scale = w_max / absmax_ff
+    if cfg.topology == Topology.ATA_T and p.w_rec.size:
+        absmax_rec = jnp.max(jnp.abs(p.w_rec.astype(jnp.float32)))
+        scale = jnp.minimum(scale, rec_max / jnp.where(absmax_rec == 0, eps, absmax_rec))
+    elif cfg.topology == Topology.ATA_F:
+        absmax_rec = jnp.abs(p.w_rec.astype(jnp.float32))
+        scale = jnp.minimum(scale, rec_max / jnp.where(absmax_rec == 0, eps, absmax_rec))
+    # membrane-register constraint: theta_q at half the register leaves
+    # 2x headroom for integration past threshold before saturation
+    theta = p.theta.astype(jnp.float32) if hasattr(p.theta, "astype") else jnp.float32(p.theta)
+    theta = jnp.where(theta == 0, eps, theta)
+    return jnp.minimum(scale, jnp.float32(0.5 * int_max(cfg.u_bits)) / theta)
+
+
+def quantize_params(
+    net: NetworkConfig, params: Sequence[FloatLayerParams]
+) -> tuple[list[IntLayerParams], list[float]]:
+    """Quantize trained float weights onto each core's fixed-point grid.
+
+    The per-core scale comes from :func:`layer_scale` (see there for the
+    selection rule); rounding is round-half-to-even with clipping onto the
+    signed grid.  A QAT-trained network (``repro.snn.qat``) deploys through
+    this exact function -- the training-time fake-quant mirrors it bit for
+    bit, so no separate QAT export path exists.
     """
     qparams, scales = [], []
     for cfg, p in zip(net.layers, params):
-        absmax_ff = float(jnp.max(jnp.abs(p.w_ff))) or 1e-12
-        scale = int_max(cfg.w_bits) / absmax_ff
-        if cfg.topology == Topology.ATA_T and p.w_rec.size:
-            absmax_rec = float(jnp.max(jnp.abs(p.w_rec))) or 1e-12
-            scale = min(scale, int_max(cfg.w_rec_bits) / absmax_rec)
-        elif cfg.topology == Topology.ATA_F:
-            absmax_rec = float(jnp.abs(p.w_rec)) or 1e-12
-            scale = min(scale, int_max(cfg.w_rec_bits) / absmax_rec)
-        # membrane-register constraint: theta_q at half the register leaves
-        # 2x headroom for integration past threshold before saturation
-        theta = float(p.theta) or 1e-12
-        scale = min(scale, 0.5 * int_max(cfg.u_bits) / theta)
-
+        scale = layer_scale(cfg, p)
         w_ff_q = jnp.clip(
             jnp.round(p.w_ff * scale), -int_max(cfg.w_bits) - 1, int_max(cfg.w_bits)
         ).astype(jnp.int32)
@@ -153,7 +182,7 @@ def quantize_params(
             w_rec_q = jnp.zeros((0,), jnp.int32)
         theta_q = jnp.round(p.theta * scale).astype(jnp.int32)
         qparams.append(IntLayerParams(w_ff=w_ff_q, w_rec=w_rec_q, theta_q=theta_q))
-        scales.append(scale)
+        scales.append(float(scale))
     return qparams, scales
 
 

@@ -52,6 +52,8 @@ __all__ = [
     "int_layer_init",
     "int_layer_step",
     "int_layer_step_dynamic",
+    "int_phase_a",
+    "int_phase_b",
     "int_layer_window",
     "int_layer_window_carry",
     "int_layer_window_from_currents",
@@ -192,14 +194,20 @@ def _integrate_acc(cfg: LayerConfig, params: IntLayerParams, state: LayerState, 
     return saturate(state.u + acc, cfg.u_bits), state.i_syn
 
 
-def _integrate_int(cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in):
-    """Phase A: accumulate weighted spikes into the integration target."""
+def int_phase_a(cfg: LayerConfig, params: IntLayerParams, state: LayerState, s_in):
+    """Phase A: accumulate weighted spikes into the integration target.
+
+    Public because the QAT straight-through forward (``repro.snn.qat``) runs
+    its exact forward values through this code path -- bit-for-bit the
+    deployment arithmetic, per phase so the float mirror can attach at every
+    intermediate.
+    """
     s_in_i = s_in.astype(jnp.int32)
     ff_acc = jnp.einsum("bi,io->bo", s_in_i, params.w_ff)  # {0,1} matmul, int32
     return _integrate_acc(cfg, params, state, ff_acc)
 
 
-def _int_phase_b(cfg: LayerConfig, params: IntLayerParams, u, i_syn, decay_u, decay_i):
+def int_phase_b(cfg: LayerConfig, params: IntLayerParams, u, i_syn, decay_u, decay_i):
     """Phase B (leak / spike / reset), shared by the static and traced steps.
 
     ``decay_u`` / ``decay_i`` are the CG applications -- the *only* place the
@@ -232,8 +240,8 @@ def int_layer_step(
 ) -> tuple[LayerState, jax.Array]:
     """One bit-exact hardware time step. Returns (new_state, spikes int32)."""
     beta_code = cfg.beta_code()
-    u, i_syn = _integrate_int(cfg, params, state, s_in)
-    return _int_phase_b(
+    u, i_syn = int_phase_a(cfg, params, state, s_in)
+    return int_phase_b(
         cfg,
         params,
         u,
@@ -258,8 +266,8 @@ def int_layer_step_dynamic(
     one program.  ``beta_register`` / ``alpha_register`` are packed 9-bit
     ``DecayCode.decay_rate_register`` values.
     """
-    u, i_syn = _integrate_int(cfg, params, state, s_in)
-    return _int_phase_b(
+    u, i_syn = int_phase_a(cfg, params, state, s_in)
+    return int_phase_b(
         cfg,
         params,
         u,
@@ -319,7 +327,7 @@ def int_layer_window_carry(
 
     def step(state, c_t):
         u, i_syn = _integrate_acc(cfg, params, state, c_t)
-        state, spk = _int_phase_b(
+        state, spk = int_phase_b(
             cfg,
             params,
             u,

@@ -41,11 +41,21 @@ class SpikeDataset:
         return tr, te
 
     def batches(self, batch_size: int, rng: np.random.Generator | None = None):
+        """Yield ``([T, B, C] spikes, labels)`` batches over the whole set.
+
+        Every sample is yielded exactly once per pass: a ragged final batch
+        (``len % batch_size`` samples) is yielded too, not dropped -- so one
+        epoch sees the entire dataset and dataset-level statistics weight
+        every sample equally.  Consumers that jit over the batch shape pay
+        one extra compile for the tail shape per pass.
+        """
         idx = np.arange(len(self.labels))
         if rng is not None:
             rng.shuffle(idx)
+        if not len(idx):
+            return
         batch_size = min(batch_size, len(idx))
-        for i in range(0, len(idx) - batch_size + 1, batch_size):
+        for i in range(0, len(idx), batch_size):
             sel = idx[i : i + batch_size]
             # time-major for lax.scan: [T, B, C]
             yield self.spikes[sel].transpose(1, 0, 2), self.labels[sel]

@@ -21,14 +21,12 @@ MODEL_FLOPS (6*N*D / 6*N_active*D) also lives here for the
 
 from __future__ import annotations
 
-import math
-from typing import Any
 
 import jax
 import numpy as np
 
 from repro.models.registry import Arch, ShapeSpec
-from repro.models.transformer import ModelConfig, layer_pattern
+from repro.models.transformer import layer_pattern
 from repro.models.whisper import WhisperConfig
 
 __all__ = ["param_bytes", "param_count", "structural_bytes", "model_flops", "capacity_bytes"]
@@ -103,7 +101,6 @@ def structural_bytes(
     n_dev, b_shards, m_shards = _mesh_factors(multi_pod)
     B = shape.global_batch
     S = shape.seq_len
-    b_loc = max(1, B // b_shards)
 
     p_bytes_total = param_bytes(arch, cfg)
     if shape.kind != "train":

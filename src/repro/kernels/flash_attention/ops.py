@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 def _on_tpu() -> bool:

@@ -9,7 +9,6 @@ XLA dequant-einsum fallback unless ``force_interpret`` (tests) is set.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import precision
 from repro.core.precision import QTensor

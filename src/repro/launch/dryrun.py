@@ -32,8 +32,6 @@ import pathlib
 import time
 import traceback
 
-import jax
-
 from repro.core.precision import PrecisionPolicy
 from repro.distributed.hlo_analysis import HW, parse_collectives, roofline_terms
 from repro.distributed.sharding import activation_rules
@@ -42,7 +40,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_decode_step, build_prefill_step, build_train_step
 from repro.models.common import unroll_scans
 from repro.models.registry import SHAPES, get_arch, list_archs
-from repro.models.transformer import ModelConfig, layer_pattern
+from repro.models.transformer import layer_pattern
 from repro.models.whisper import WhisperConfig
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"

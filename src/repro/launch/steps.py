@@ -88,7 +88,6 @@ def build_train_step(
     o_specs = type(abs_opt)(step=P(), mu=p_specs, nu=p_specs)
     b_specs = arch.input_pspecs(mesh, shape, cfg)
     p_sh, o_sh, b_sh = _named(mesh, p_specs), _named(mesh, o_specs), _named(mesh, b_specs)
-    m_sh = NamedSharding(mesh, P())
 
     jitted = jax.jit(
         train_step,

@@ -16,7 +16,6 @@ Shapes follow the [batch, seq, heads, head_dim] convention throughout.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -223,7 +222,6 @@ class KVCache:
     @staticmethod
     def append_one(cache, k_new, v_new):
         """Insert one token's K/V at each sample's current length."""
-        B = k_new.shape[0]
         idx = cache["len"]  # [B]
         k = jax.vmap(lambda c, x, i: jax.lax.dynamic_update_slice_in_dim(c, x, i, axis=0))(
             cache["k"], k_new, idx

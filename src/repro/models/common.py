@@ -22,7 +22,6 @@ import contextlib
 import dataclasses
 import math
 from contextvars import ContextVar
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

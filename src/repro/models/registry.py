@@ -14,10 +14,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models import common, transformer as tfm, whisper as whs
-from repro.models.transformer import ModelConfig
 from repro.models.whisper import WhisperConfig
 
 __all__ = ["ShapeSpec", "SHAPES", "Arch", "register", "get_arch", "list_archs"]

@@ -30,7 +30,6 @@ from repro.models.common import scan as common_scan
 from repro.models.mamba2 import (
     SSMConfig,
     ssm_apply,
-    ssm_cache_init,
     ssm_cache_template,
     ssm_decode_step,
     ssm_template,

@@ -1,0 +1,501 @@
+"""Quantization-aware training (QAT) for Flexi-NeurA networks.
+
+The Flex-plorer's post-training flow quantizes a float-trained network onto
+each candidate's fixed-point grid (``network.quantize_params``) and scores it
+with the bit-exact simulator.  At aggressive bit-widths (w_bits <= 4) that
+leaves accuracy on the table: the float optimum is not the fixed-point
+optimum.  This module trains *into* the deployment grid instead, with a
+straight-through-estimator (STE) fake-quant forward whose defining property
+is:
+
+    the QAT forward's values ARE the deployment datapath's values.
+
+Every forward intermediate is produced by the same int32 phase-A/phase-B
+code the inference backends run (``snn_layer.int_phase_a`` /
+``int_phase_b``), with the quantization scale coming from the same
+``network.layer_scale`` arithmetic ``quantize_params`` uses -- so a
+QAT-trained network deploys through the unchanged ``quantize_params`` ->
+``eval_int`` / serving / shard paths with zero new inference code, and the
+training-time evaluation equals ``eval_int`` bit for bit (asserted by
+``tests/test_qat.py``).
+
+Gradients come from a float *mirror* of each step glued on with the
+straight-through identity ``exact + (approx - stop_grad(approx))``: the
+forward value is the exact integer result, the backward graph is the smooth
+float approximation (surrogate spike gradient through the rescaled membrane
+argument, multiplicative ``k/256`` decay in place of the CG's floor-shift
+cascade, pass-through rounding/saturation).  This is the standard STE recipe
+(fake-quant forward / identity backward), specialised to the paper's
+hardware numerics: the mirror runs in the *scaled integer domain*, and the
+surrogate spike argument is divided back by the scale so the surrogate's
+effective slope matches float training regardless of the candidate's grid.
+
+Two entry points:
+
+* :func:`run_qat` -- single-candidate fake-quant forward (what
+  ``train_snn(qat=...)`` differentiates).  Decay registers and weight-grid
+  maxima default to the network config but may be traced values, which is
+  what makes the forward ``vmap``-able over precision candidates.
+* :func:`refine_candidates` -- the Flex-plorer's second-phase refinement:
+  fine-tune a whole population of precision candidates at once (one vmapped
+  train step over the candidate axis, spread across devices via the same
+  ``shard_map`` fan-out as the population DSE sweep), scoring each epoch
+  with the bit-exact ``eval_int_population`` path and keeping each
+  candidate's best checkpoint.  Epoch 0 scores the unrefined post-training
+  quantization, so a refined candidate never reports worse than its PTQ
+  baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coeff_gen
+from repro.core import shard as shard_lib
+from repro.core.backend import SimRecord, check_population_structure
+from repro.core.fixed_point import int_max, saturate
+from repro.core.network import NetworkConfig, layer_scale, quantize_params
+from repro.core.snn_layer import (
+    FloatLayerParams,
+    IntLayerParams,
+    LayerState,
+    NeuronModel,
+    ResetMode,
+    Topology,
+    float_layer_init,
+    int_phase_a,
+    int_phase_b,
+)
+from repro.distributed import compat
+from repro.snn.surrogate import fast_sigmoid
+from repro.train import optimizer as opt_lib
+
+__all__ = [
+    "PrecisionConfig",
+    "FakeQuantLayer",
+    "fake_quant_layer",
+    "run_qat",
+    "eval_qat",
+    "RefineResult",
+    "refine_candidates",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """The precision a network should be quantization-aware-trained *for*.
+
+    ``None`` keeps the network's current value for that knob (the same
+    semantics as ``NetworkConfig.replace_precisions``).  ``train_snn(qat=
+    PrecisionConfig(...))`` trains into this grid; deployment is then the
+    ordinary ``quantize_params`` at the same precisions.
+    """
+
+    w_bits: int | None = None
+    w_rec_bits: int | None = None
+    leak_bits: int | None = None
+
+    def apply(self, net: NetworkConfig) -> NetworkConfig:
+        return net.replace_precisions(
+            w_bits=self.w_bits, w_rec_bits=self.w_rec_bits, leak_bits=self.leak_bits
+        )
+
+
+class FakeQuantLayer(NamedTuple):
+    """STE-quantized per-core parameters, in the scaled integer domain.
+
+    All three arrays are float32 holding exactly-integer values equal to the
+    corresponding ``IntLayerParams`` from ``quantize_params`` at the same
+    precision; gradients flow back to the float parameters through the
+    straight-through round (d round(w * s) / d w = s).
+    """
+
+    w_ff: jax.Array  # f32 [n_in, n_out], integer-valued
+    w_rec: jax.Array  # f32 [n_out, n_out] | scalar | [0], integer-valued
+    theta_q: jax.Array  # f32 scalar, integer-valued
+    scale: jax.Array  # f32 scalar, stop-gradded
+
+
+def _ste_round(x):
+    """Round-half-to-even forward, identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _ste_exact(int_value, approx):
+    """Forward: the exact int32 value.  Backward: the float mirror's gradient.
+
+    The straight-through glue between the deployment datapath and the
+    differentiable mirror; both arguments must be the same shape.
+    """
+    exact = jax.lax.stop_gradient(int_value.astype(jnp.float32))
+    return exact + (approx - jax.lax.stop_gradient(approx))
+
+
+def _decay_factor(decay_register):
+    """The CG's nominal multiplicative factor for a packed DecayRate register."""
+    reg = jnp.asarray(decay_register, jnp.int32)
+    return jnp.where(reg >= 256, jnp.float32(1.0), reg.astype(jnp.float32) / 256.0)
+
+
+def fake_quant_layer(cfg, p: FloatLayerParams, w_max=None, rec_max=None) -> FakeQuantLayer:
+    """Fake-quantize one core's float parameters onto its fixed-point grid.
+
+    Mirrors ``network.quantize_params`` exactly: same ``layer_scale``, same
+    round-half-to-even, same clip bounds -- the returned integer-valued
+    floats equal the deployed ``IntLayerParams`` bit for bit.  ``w_max`` /
+    ``rec_max`` (defaults ``int_max(w_bits)`` / ``int_max(w_rec_bits)``)
+    may be traced, so a population of candidates with different weight
+    bit-widths runs through one vmapped program.
+    """
+    if w_max is None:
+        w_max = int_max(cfg.w_bits)
+    if rec_max is None:
+        rec_max = int_max(cfg.w_rec_bits)
+    w_max = jnp.asarray(w_max, jnp.float32)
+    rec_max = jnp.asarray(rec_max, jnp.float32)
+    scale = jax.lax.stop_gradient(layer_scale(cfg, p, w_max, rec_max))
+    w_ff = jnp.clip(_ste_round(p.w_ff * scale), -w_max - 1.0, w_max)
+    if cfg.topology in (Topology.ATA_T, Topology.ATA_F):
+        w_rec = jnp.clip(_ste_round(p.w_rec * scale), -rec_max - 1.0, rec_max)
+    else:
+        w_rec = jnp.zeros((0,), jnp.float32)
+    theta_q = _ste_round(p.theta * scale)
+    return FakeQuantLayer(w_ff=w_ff, w_rec=w_rec, theta_q=theta_q, scale=scale)
+
+
+def _qat_layer_step(cfg, fq: FakeQuantLayer, state: LayerState, s_in, spike_fn, beta_reg, alpha_reg):
+    """One QAT time step: exact int32 forward, float-mirror backward.
+
+    ``state`` carries float32 arrays whose values are the exact integer
+    registers; the returned state has the same property (each leaf is
+    ``_ste_exact``-pinned to the deployment step's output).
+    """
+    qint = IntLayerParams(
+        w_ff=jax.lax.stop_gradient(fq.w_ff).astype(jnp.int32),
+        w_rec=jax.lax.stop_gradient(fq.w_rec).astype(jnp.int32),
+        theta_q=jax.lax.stop_gradient(fq.theta_q).astype(jnp.int32),
+    )
+    state_i = LayerState(
+        u=state.u.astype(jnp.int32),
+        i_syn=state.i_syn.astype(jnp.int32),
+        prev_spk=state.prev_spk.astype(jnp.int32),
+    )
+    s_in_f = s_in.astype(jnp.float32)
+
+    # --- phase A: exact integration through the deployment code path ---
+    u_i, isyn_i = int_phase_a(cfg, qint, state_i, s_in_f)
+    # float mirror of the same accumulation
+    acc_f = jnp.einsum("bi,io->bo", s_in_f, fq.w_ff)
+    if cfg.topology == Topology.ATA_T:
+        acc_f = acc_f + jnp.einsum("bi,io->bo", state.prev_spk, fq.w_rec)
+    elif cfg.topology == Topology.ATA_F:
+        acc_f = acc_f + state.prev_spk * fq.w_rec
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        u_f, isyn_f = state.u, state.i_syn + acc_f
+    else:
+        u_f, isyn_f = state.u + acc_f, state.i_syn
+    u = _ste_exact(u_i, u_f)
+    i_syn = _ste_exact(isyn_i, isyn_f)
+
+    # --- phase B: exact spike/reset/leak (traced CG registers) ---
+    state_i2, spk_i = int_phase_b(
+        cfg,
+        qint,
+        u_i,
+        isyn_i,
+        lambda x: coeff_gen.apply_decay_traced(x, beta_reg),
+        lambda x: coeff_gen.apply_decay_traced(x, alpha_reg),
+    )
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        u_tmp = _ste_exact(saturate(u_i + isyn_i, cfg.u_bits), u + i_syn)
+    else:
+        u_tmp = u
+    # Surrogate spike on the *descaled* membrane argument: the Heaviside
+    # forward is the exact integer comparison (scale > 0 preserves sign),
+    # while the surrogate's slope sees float-domain magnitudes.
+    inv_scale = 1.0 / fq.scale
+    spk = spike_fn((u_tmp - fq.theta_q) * inv_scale)
+    if cfg.reset == ResetMode.ZERO:
+        u_reset = jnp.zeros_like(u_tmp)
+    else:
+        u_reset = u_tmp - fq.theta_q
+    u_new_f = spk * u_reset + (1.0 - spk) * (_decay_factor(beta_reg) * u_tmp)
+    u_new = _ste_exact(state_i2.u, u_new_f)
+    if cfg.neuron == NeuronModel.SYNAPTIC:
+        i_new = _ste_exact(state_i2.i_syn, _decay_factor(alpha_reg) * i_syn)
+    else:
+        i_new = i_syn
+    spk = _ste_exact(spk_i, spk)  # forward pinned to the int path, surrogate grad kept
+    return LayerState(u=u_new, i_syn=i_new, prev_spk=spk), spk
+
+
+def run_qat(
+    net: NetworkConfig,
+    params: Sequence[FloatLayerParams],
+    spikes_in,
+    spike_fn,
+    *,
+    w_maxes=None,
+    rec_maxes=None,
+    beta_regs=None,
+    alpha_regs=None,
+) -> SimRecord:
+    """Differentiable fake-quant simulation at ``net``'s precisions.
+
+    ``spikes_in``: {0,1} [T, batch, n_in].  Returns a :class:`SimRecord`
+    whose ``spike_counts`` are float32 *integer-valued* logits equal, bit
+    for bit, to ``run_int(net, quantize_params(net, params)[0], spikes_in)``
+    -- while carrying surrogate gradients back to ``params``.
+
+    The optional keyword arrays override the per-layer quantization grid
+    with traced values (``w_maxes`` / ``rec_maxes``: f32 ``[n_layers]``
+    weight-grid maxima; ``beta_regs`` / ``alpha_regs``: int32 ``[n_layers]``
+    packed DecayRate registers).  They default to ``net``'s static config;
+    passing them is what lets :func:`refine_candidates` vmap one program
+    over a population of precision candidates.
+    """
+    if beta_regs is None:
+        beta_regs = jnp.asarray(
+            [cfg.beta_code().decay_rate_register for cfg in net.layers], jnp.int32
+        )
+    if alpha_regs is None:
+        alpha_regs = jnp.asarray(
+            [cfg.alpha_code().decay_rate_register for cfg in net.layers], jnp.int32
+        )
+    fq_layers = [
+        fake_quant_layer(
+            cfg,
+            p,
+            None if w_maxes is None else w_maxes[i],
+            None if rec_maxes is None else rec_maxes[i],
+        )
+        for i, (cfg, p) in enumerate(zip(net.layers, params))
+    ]
+    spikes_f = spikes_in.astype(jnp.float32)
+    batch = spikes_f.shape[1]
+    states = [float_layer_init(cfg, batch) for cfg in net.layers]
+
+    def one_step(states, s_t):
+        new_states = []
+        x = s_t
+        emitted = []
+        for i, (cfg, fq, st) in enumerate(zip(net.layers, fq_layers, states)):
+            st, x = _qat_layer_step(cfg, fq, st, x, spike_fn, beta_regs[i], alpha_regs[i])
+            new_states.append(st)
+            emitted.append(jnp.sum(x, axis=-1))
+        return new_states, (x, jnp.stack(emitted, axis=0))
+
+    states, (out_spikes, emitted) = jax.lax.scan(one_step, states, spikes_f)
+    counts = jnp.sum(out_spikes, axis=0)
+    layer_spikes = [emitted[:, i, :] for i in range(len(net.layers))]
+    input_events = jnp.sum(spikes_in != 0, axis=-1)
+    return SimRecord(
+        spike_counts=counts, layer_spikes=layer_spikes, input_events=input_events
+    )
+
+
+def eval_qat(
+    net: NetworkConfig,
+    params,
+    ds,
+    surrogate_slope: float = 25.0,
+    batch_size: int = 256,
+) -> float:
+    """Accuracy of the QAT forward -- equal to ``eval_int`` after
+    ``quantize_params`` at the same precisions (the parity contract)."""
+    spike_fn = fast_sigmoid(surrogate_slope)
+
+    @jax.jit
+    def fwd(params, spikes):
+        return run_qat(net, params, spikes, spike_fn).predictions()
+
+    correct = total = 0
+    for spikes, labels in ds.batches(batch_size):
+        preds = np.asarray(fwd(params, jnp.asarray(spikes)))
+        correct += int((preds == labels).sum())
+        total += len(labels)
+    return correct / max(1, total)
+
+
+# ---------------------------------------------------------------------------
+# Population refinement: fine-tune the annealer's finalists at their own grids
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RefineResult:
+    """Per-candidate outcome of a population QAT fine-tune.
+
+    ``params[k]`` is candidate k's best float checkpoint (by bit-exact
+    quantized accuracy on the scoring set, epoch 0 = the unrefined input
+    included), ``best_acc[k]`` that checkpoint's accuracy and ``base_acc[k]``
+    the epoch-0 (post-training-quantization) accuracy -- so
+    ``best_acc >= base_acc`` elementwise by construction.
+    """
+
+    candidates: list[NetworkConfig]
+    params: list
+    best_acc: np.ndarray
+    base_acc: np.ndarray
+    history: list[dict]
+
+
+def refine_candidates(
+    net: NetworkConfig,
+    candidates: Sequence[NetworkConfig],
+    float_params: Sequence[FloatLayerParams],
+    train_ds,
+    eval_ds,
+    *,
+    epochs: int = 2,
+    batch_size: int = 128,
+    lr: float = 5e-4,
+    seed: int = 0,
+    surrogate_slope: float = 25.0,
+    rate_reg: float = 1e-4,
+    eval_batch: int = 512,
+    mesh=None,
+) -> RefineResult:
+    """Fine-tune ``float_params`` at each candidate's precision, in parallel.
+
+    All candidates train simultaneously: the QAT train step is vmapped over
+    the candidate axis (stacked parameters + per-candidate traced grid
+    maxima and decay registers -- the same trick as the population DSE
+    sweep), and with ``mesh`` spanning >1 devices the candidate axis is
+    partitioned across them via ``shard_map`` (edge-repeat padding, results
+    sliced back), so spare devices fine-tune different finalists instead of
+    idling.  Scoring is *always* the bit-exact quantized path
+    (``eval_int_population``), once per epoch including epoch 0, and each
+    candidate keeps its best checkpoint -- refinement can reorder but never
+    lose accuracy vs post-training quantization on the scoring set.
+
+    Per-candidate training arithmetic under the vmap/shard fan-out may
+    reassociate float reductions vs a hypothetical serial fine-tune; scores
+    are unaffected (they come from the int32 evaluator), so this is a speed
+    knob, not an accuracy knob.
+    """
+    # Lazy import: repro.snn.train imports this module.
+    from repro.snn.train import eval_int_population, spike_count_loss
+
+    candidates = list(candidates)
+    check_population_structure(net, candidates)
+    n_cand = len(candidates)
+    dmesh = shard_lib.resolve_mesh(mesh)
+    n_shards = dmesh.n_shards if dmesh is not None else 1
+    padded_n = -(-n_cand // n_shards) * n_shards
+    padded = candidates + [candidates[-1]] * (padded_n - n_cand)
+
+    w_maxes = jnp.asarray(
+        [[int_max(lc.w_bits) for lc in cn.layers] for cn in padded], jnp.float32
+    )
+    rec_maxes = jnp.asarray(
+        [[int_max(lc.w_rec_bits) for lc in cn.layers] for cn in padded], jnp.float32
+    )
+    beta_regs = jnp.asarray(
+        [[lc.beta_code().decay_rate_register for lc in cn.layers] for cn in padded],
+        jnp.int32,
+    )
+    alpha_regs = jnp.asarray(
+        [[lc.alpha_code().decay_rate_register for lc in cn.layers] for cn in padded],
+        jnp.int32,
+    )
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * padded_n), list(float_params))
+
+    spike_fn = fast_sigmoid(surrogate_slope)
+    n_train = len(train_ds.labels)
+    eff_batch = min(batch_size, n_train)
+    steps_per_epoch = max(1, -(-n_train // eff_batch))
+    optimizer = opt_lib.adamw(
+        opt_lib.linear_warmup_cosine(lr, steps_per_epoch, max(1, epochs) * steps_per_epoch)
+    )
+    opt_state = jax.vmap(optimizer.init)(stacked)
+
+    def cand_loss(params, wmax, recmax, breg, areg, spikes, labels):
+        rec = run_qat(
+            net, params, spikes, spike_fn,
+            w_maxes=wmax, rec_maxes=recmax, beta_regs=breg, alpha_regs=areg,
+        )
+        total = sum(jnp.sum(s) for s in rec.layer_spikes) / spikes.shape[1]
+        loss = spike_count_loss(rec.spike_counts, labels, rate_reg, total)
+        acc = jnp.mean((rec.predictions() == labels).astype(jnp.float32))
+        return loss, acc
+
+    def cand_step(params, opt_state, wmax, recmax, breg, areg, spikes, labels):
+        (loss, acc), grads = jax.value_and_grad(cand_loss, has_aux=True)(
+            params, wmax, recmax, breg, areg, spikes, labels
+        )
+        grads, _ = opt_lib.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, loss, acc
+
+    vstep = jax.vmap(cand_step, in_axes=(0, 0, 0, 0, 0, 0, None, None))
+    if dmesh is not None and dmesh.n_shards > 1:
+        from jax.sharding import PartitionSpec as P
+
+        ax = dmesh.axis
+        vstep = compat.shard_map(
+            vstep,
+            mesh=dmesh.mesh,
+            in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax), P(ax), P(), P()),
+            out_specs=(P(ax), P(ax), P(ax), P(ax)),
+            check_vma=False,
+        )
+    train_step = jax.jit(vstep)
+
+    def score(stacked_params):
+        """Bit-exact quantized accuracy per (unpadded) candidate."""
+        qparams_list = []
+        for k in range(n_cand):
+            params_k = jax.tree.map(lambda x: x[k], stacked_params)
+            qparams_list.append(quantize_params(candidates[k], params_k)[0])
+        return np.asarray(
+            eval_int_population(
+                net, candidates, qparams_list, eval_ds, batch_size=eval_batch, mesh=dmesh
+            )
+        )
+
+    def unpadded_host(stacked_params):
+        return jax.tree.map(lambda x: np.asarray(x[:n_cand]), stacked_params)
+
+    base_acc = score(stacked)
+    best_acc = base_acc.copy()
+    best_host = unpadded_host(stacked)
+    history = [{"epoch": -1, "acc": base_acc.tolist()}]
+
+    rng = np.random.default_rng(seed)
+    for epoch in range(epochs):
+        for spikes, labels in train_ds.batches(eff_batch, rng):
+            stacked, opt_state, loss, acc = train_step(
+                stacked, opt_state, w_maxes, rec_maxes, beta_regs, alpha_regs,
+                jnp.asarray(spikes), jnp.asarray(labels),
+            )
+        accs = score(stacked)
+        history.append({"epoch": epoch, "acc": accs.tolist()})
+        improved = accs > best_acc
+        if improved.any():
+            host = unpadded_host(stacked)
+            best_host = jax.tree.map(
+                lambda b, h: np.where(
+                    improved.reshape((-1,) + (1,) * (h.ndim - 1)), h, b
+                ),
+                best_host,
+                host,
+            )
+            best_acc = np.where(improved, accs, best_acc)
+
+    out_params = [
+        jax.tree.map(lambda x, k=k: jnp.asarray(x[k]), best_host) for k in range(n_cand)
+    ]
+    return RefineResult(
+        candidates=candidates,
+        params=out_params,
+        best_acc=best_acc,
+        base_acc=base_acc,
+        history=history,
+    )

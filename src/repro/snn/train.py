@@ -19,8 +19,9 @@ import numpy as np
 
 from repro.core import backend as backend_lib
 from repro.core import shard as shard_lib
-from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_float, run_int
+from repro.core.network import NetworkConfig, init_float_params, run_float, run_int
 from repro.data.snn_datasets import SpikeDataset
+from repro.snn import qat as qat_lib
 from repro.snn.surrogate import fast_sigmoid
 from repro.train import optimizer as opt_lib
 
@@ -54,6 +55,9 @@ class TrainResult:
     params: list
     history: list[dict]
     net: NetworkConfig
+    # set when trained quantization-aware: the precision-overridden network
+    # the parameters were trained *for* (deploy by quantize_params on it)
+    qat_net: NetworkConfig | None = None
 
 
 def train_snn(
@@ -68,19 +72,45 @@ def train_snn(
     surrogate_slope: float = 25.0,
     log_every: int = 0,
     eval_ds: SpikeDataset | None = None,
+    qat: "qat_lib.PrecisionConfig | NetworkConfig | None" = None,
+    init_params: list | None = None,
 ) -> TrainResult:
-    key = jax.random.PRNGKey(seed)
-    params = init_float_params(key, net)
-    spike_fn = fast_sigmoid(surrogate_slope)
+    """Surrogate-gradient BPTT; optionally quantization-aware.
 
-    steps_per_epoch = len(train_ds.labels) // batch_size
+    ``qat`` switches the forward pass to the straight-through fake-quant
+    simulation (``repro.snn.qat.run_qat``) at the given precisions -- a
+    :class:`~repro.snn.qat.PrecisionConfig` overrides ``net``'s precision
+    knobs, a full :class:`NetworkConfig` is used as-is (it must share
+    ``net``'s structure).  The trained parameters then deploy through the
+    ordinary ``quantize_params`` -> ``eval_int`` path bit-exactly at those
+    precisions.  ``init_params`` warm-starts from existing float parameters
+    (e.g. a float-trained network being QAT-fine-tuned); default is a fresh
+    ``init_float_params``.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = list(init_params) if init_params is not None else init_float_params(key, net)
+    spike_fn = fast_sigmoid(surrogate_slope)
+    if qat is None:
+        qat_net = None
+    elif isinstance(qat, qat_lib.PrecisionConfig):
+        qat_net = qat.apply(net)
+    else:
+        qat_net = qat
+
+    # ceil: `SpikeDataset.batches` yields the ragged tail batch too, so an
+    # epoch really takes ceil(n / batch) optimizer steps (schedule horizon)
+    eff_batch = min(batch_size, len(train_ds.labels))
+    steps_per_epoch = max(1, -(-len(train_ds.labels) // eff_batch))
     optimizer = opt_lib.adamw(
         opt_lib.linear_warmup_cosine(lr, steps_per_epoch, epochs * steps_per_epoch)
     )
     opt_state = optimizer.init(params)
 
     def loss_fn(params, spikes, labels):
-        rec = run_float(net, params, spikes, spike_fn)
+        if qat_net is not None:
+            rec = qat_lib.run_qat(qat_net, params, spikes, spike_fn)
+        else:
+            rec = run_float(net, params, spikes, spike_fn)
         total = sum(jnp.sum(s) for s in rec.layer_spikes) / spikes.shape[1]
         loss = spike_count_loss(rec.spike_counts, labels, rate_reg, total)
         acc = jnp.mean((rec.predictions() == labels).astype(jnp.float32))
@@ -99,7 +129,7 @@ def train_snn(
     for epoch in range(epochs):
         t0 = time.time()
         losses, accs = [], []
-        for spikes, labels in train_ds.batches(batch_size, rng):
+        for spikes, labels in train_ds.batches(eff_batch, rng):
             params, opt_state, loss, acc, gnorm = train_step(
                 params, opt_state, jnp.asarray(spikes), jnp.asarray(labels)
             )
@@ -112,11 +142,14 @@ def train_snn(
             "seconds": time.time() - t0,
         }
         if eval_ds is not None:
-            entry["eval_acc"] = eval_float(net, params, eval_ds, surrogate_slope)
+            if qat_net is not None:
+                entry["eval_acc"] = qat_lib.eval_qat(qat_net, params, eval_ds, surrogate_slope)
+            else:
+                entry["eval_acc"] = eval_float(net, params, eval_ds, surrogate_slope)
         history.append(entry)
         if log_every and (epoch % log_every == 0 or epoch == epochs - 1):
             print(f"[train_snn:{net.name}] {entry}")
-    return TrainResult(params=params, history=history, net=net)
+    return TrainResult(params=params, history=history, net=net, qat_net=qat_net)
 
 
 def eval_float(

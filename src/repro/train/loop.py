@@ -24,7 +24,6 @@ import pathlib
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer, latest_step
 from repro.data.tokens import SyntheticTokens

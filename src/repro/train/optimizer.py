@@ -8,7 +8,6 @@ re-shards exactly like parameters.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

@@ -1,0 +1,18 @@
+"""Shared pytest hooks.
+
+``REPRO_COMPILE_CACHE=<dir>`` points jax's persistent compilation cache at a
+directory before any test compiles -- CI sets it to an ``actions/cache``-backed
+path (keyed on the jax version) so the repeated shard/serve compiles of the
+multi-device leg hit the cache across workflow runs instead of dominating
+wall-clock.  Local runs are unaffected unless the variable is exported.
+"""
+
+import os
+
+
+def pytest_configure(config):
+    cache_dir = os.environ.get("REPRO_COMPILE_CACHE")
+    if cache_dir:
+        from repro.distributed.compat import enable_compilation_cache
+
+        enable_compilation_cache(cache_dir)

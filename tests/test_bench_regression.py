@@ -4,7 +4,6 @@ import json
 import pathlib
 import sys
 
-import pytest
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_ROOT))  # benchmarks/ is a plain directory, not installed

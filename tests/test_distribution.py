@@ -13,10 +13,10 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.precision import PrecisionPolicy, QTensor, quantize_tree
-from repro.distributed.hlo_analysis import CollectiveStats, parse_collectives, roofline_terms
+from repro.distributed.hlo_analysis import parse_collectives, roofline_terms
 from repro.distributed.sharding import activation_rules, logical_spec
 from repro.distributed.structural import model_flops, param_count, structural_bytes
-from repro.models.common import ParamSpec, dense, logical_to_mesh, partition_spec
+from repro.models.common import dense, logical_to_mesh, partition_spec
 from repro.models.registry import SHAPES, get_arch
 
 

@@ -5,7 +5,6 @@ NaNs (deliverable f), plus decode-path equivalence checks and SSD/attention
 numerics oracles.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ import pytest
 
 from repro.models.attention import AttnMask, attend, attend_chunked, decode_attend, rope
 from repro.models.mamba2 import SSMConfig, ssd_scan
-from repro.models.registry import SHAPES, ShapeSpec, get_arch, list_archs
+from repro.models.registry import ShapeSpec, get_arch, list_archs
 
 TINY_TRAIN = ShapeSpec("tiny_train", 64, 2, "train")
 TINY_PREFILL = ShapeSpec("tiny_prefill", 64, 2, "prefill")

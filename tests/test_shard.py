@@ -13,7 +13,6 @@ devices in a fresh interpreter, so genuine cross-device sharding is
 exercised even when the ambient suite runs on one device.
 """
 
-import json
 import os
 import subprocess
 import sys

@@ -1,7 +1,6 @@
 """Training substrate: optimizer, checkpointing, compression, elasticity,
 data pipeline, fault-tolerant train loop, serving engine."""
 
-import json
 import pathlib
 
 import jax

@@ -7,10 +7,8 @@
 5. serve a reduced LM with continuous batching (+ quantized weights).
 """
 
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
