@@ -3,16 +3,24 @@
 Sweeps Bernoulli input spike density on the paper's MNIST-scale 256-128-10
 LIF network and times ``run_int`` samples/sec for every registered inference
 backend (``reference`` step-major, ``fused`` layer-major dense, ``event``
-layer-major sparse).  The point being measured is the event-driven
-contract: the ``event`` backend's work scales with spike counts, so its
-advantage over the dense paths must grow as the raster gets sparser --
-mirroring how the modeled hardware latency (``hw_model.latency_seconds``)
-scales with the same event counts.
+layer-major sparse) plus ``event-pallas`` -- the jit-compatible
+fixed-capacity strategy, timed through one reused jitted forward.  The
+point being measured is the event-driven contract: the event paths' work
+scales with spike counts, so their advantage over the dense paths must
+grow as the raster gets sparser -- mirroring how the modeled hardware
+latency (``hw_model.latency_seconds``) scales with the same event counts.
 
 Per density the report also records the event backend's chosen gather
 budget (events-per-step capacity after lane rounding) and the modeled
 hardware latency at the measured traffic, so the software speedup and the
 modeled-hardware speedup can be compared side by side.
+
+A ``composition`` section measures the two integrations that used to fall
+back to dense: event x shard (``run_int_sharded`` with the pallas-strategy
+event backend -- one compiled program across the mesh) and event x serve
+(``SNNServeEngine`` admitting a sparse stream to the jitted
+``"event-pallas"`` lane route).  Their ``samples_per_sec`` keys ride the
+same ``--check-regression`` gate as the density sweep.
 
 Emits ``BENCH_event.json`` at the repo root for the perf trajectory
 (full-size runs only -- ``--fast`` smoke passes measure a reduced workload
@@ -33,9 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hw_model
-from repro.core.backend import _round_capacity, get_backend
+from repro.core import shard as shard_lib
+from repro.core.backend import EventBackend, _round_capacity, get_backend
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
 from repro.core.snn_layer import LayerConfig, NeuronModel
+from repro.serve.snn_engine import SNNRequest, SNNServeEngine
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT = _ROOT / "BENCH_event.json"
@@ -66,21 +76,22 @@ def _sparse_batches(net, n, T, batch, density, seed=0):
     ]
 
 
-def _make_fwd(net, qparams, backend_name: str):
-    """One reusable forward per backend.
+def _make_fwd(net, qparams, spec):
+    """One reusable forward per backend (name or configured instance).
 
-    jit-compatible backends run through one reused jitted forward; the event
-    backend is host-driven (it sizes sparse budgets from concrete data and
-    jits per layer internally), so it is timed as its consumers call it --
-    the budget-sizing work is part of its real cost.
+    jit-compatible backends (including ``EventBackend(strategy="pallas")``)
+    run through one reused jitted forward; the eager event strategies are
+    host-driven (they size sparse budgets from concrete data and jit per
+    layer internally), so they are timed as their consumers call them --
+    the budget-sizing work is part of their real cost.
     """
-    backend = get_backend(backend_name)
+    backend = get_backend(spec)
     if backend.jit_compatible:
         return jax.jit(lambda s: run_int(net, qparams, s, backend=backend).spike_counts)
     return lambda s: run_int(net, qparams, s, backend=backend).spike_counts
 
 
-def _time_backends(net, qparams, batches, repeats: int) -> dict[str, float]:
+def _time_backends(net, qparams, batches, repeats: int, specs: dict) -> dict[str, float]:
     """Steady-state seconds per full pass over ``batches``, per backend.
 
     Backends are timed in *interleaved rounds* (ref, fused, event, ref, ...)
@@ -88,11 +99,11 @@ def _time_backends(net, qparams, batches, repeats: int) -> dict[str, float]:
     then land on every backend equally and are discarded rather than biasing
     whichever backend ran during the noise (the usual ``timeit`` practice).
     """
-    fwds = {name: _make_fwd(net, qparams, name) for name in BACKENDS}
+    fwds = {name: _make_fwd(net, qparams, spec) for name, spec in specs.items()}
     for fwd in fwds.values():
         for b in batches:
             fwd(b).block_until_ready()  # compile/warm every shape + budget bucket
-    best = {name: float("inf") for name in BACKENDS}
+    best = {name: float("inf") for name in specs}
     for _ in range(repeats):
         for name, fwd in fwds.items():
             t0 = time.perf_counter()
@@ -130,14 +141,20 @@ def run(fast: bool = False):
             "event_strategy": get_backend("event").resolved_strategy(),
             "backends": {},
         }
-        seconds = _time_backends(net, qparams, batches, repeats)
-        for backend in BACKENDS:
+        specs: dict = {name: name for name in BACKENDS}
+        specs["event-pallas"] = EventBackend("pallas", event_budget=max(1, k_max))
+        seconds = _time_backends(net, qparams, batches, repeats, specs)
+        for backend in specs:
             sec = seconds[backend]
             sps = len(batches) * batch / sec
             entry["backends"][backend] = {"seconds_per_pass": sec, "samples_per_sec": sps}
         ref_sps = entry["backends"]["reference"]["samples_per_sec"]
         ev_sps = entry["backends"]["event"]["samples_per_sec"]
         entry["event_speedup_vs_reference"] = ev_sps / ref_sps
+        entry["event_pallas_speedup_vs_fused"] = (
+            entry["backends"]["event-pallas"]["samples_per_sec"]
+            / entry["backends"]["fused"]["samples_per_sec"]
+        )
 
         # modeled hardware latency at the measured traffic, for the same story
         rec = run_int(net, qparams, batches[0], backend="event")
@@ -145,21 +162,105 @@ def run(fast: bool = False):
         entry["modeled_hw_latency_ms"] = lat * 1e3
         report["densities"][f"{density:.2f}"] = entry
 
-        for backend in BACKENDS:
+        for backend in specs:
             b = entry["backends"][backend]
-            extra = (
-                f";speedup_vs_reference={entry['event_speedup_vs_reference']:.2f}x"
-                f";event_budget={budget}/{net.n_in}"
-                if backend == "event"
-                else ""
-            )
+            if backend == "event":
+                extra = (
+                    f";speedup_vs_reference={entry['event_speedup_vs_reference']:.2f}x"
+                    f";event_budget={budget}/{net.n_in}"
+                )
+            elif backend == "event-pallas":
+                extra = f";speedup_vs_fused={entry['event_pallas_speedup_vs_fused']:.2f}x"
+            else:
+                extra = ""
             rows.append((
                 f"event/density{density:.2f}-{backend}",
                 b["seconds_per_pass"] * 1e6,
                 f"samples_per_sec={b['samples_per_sec']:.1f}{extra}",
             ))
 
+    report["composition"] = _composition(net, qparams, n, T, batch, repeats, rows)
+
     out = FAST_OUT if fast else OUT
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(report, indent=2))
     return rows
+
+
+def _composition(net, qparams, n, T, batch, repeats, rows) -> dict:
+    """event x shard and event x serve, both on the jitted sparse path.
+
+    Before the pallas strategy these compositions fell back to dense: the
+    sharded run abandoned the mesh for a serial eager pass, and the serving
+    engine's jitted chunk advance integrated layer 0 densely.  Both are
+    measured here at the serving admission density (5%) so the regression
+    gate holds the *composed* programs fast, not just the leaf backend.
+    """
+    density = 0.05
+    comp: dict = {"input_density": density}
+
+    # --- event x shard: one compiled program across the mesh ---------------
+    batches = _sparse_batches(net, n, T, batch, density)
+    spikes = batches[0]
+    k_max = max(1, int(jnp.max(jnp.sum(spikes, axis=-1))))
+    backend = EventBackend("pallas", event_budget=k_max)
+    dmesh = shard_lib.resolve_mesh("auto")
+
+    def shard_pass():
+        return shard_lib.run_int_sharded(
+            net, qparams, spikes, dmesh, backend=backend
+        ).spike_counts.block_until_ready()
+
+    shard_pass()  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        shard_pass()
+        best = min(best, time.perf_counter() - t0)
+    comp["event_x_shard"] = {
+        "n_shards": dmesh.n_shards,
+        "event_strategy": backend.resolved_strategy(),
+        "jit_compatible": backend.jit_compatible,
+        "event_budget": backend.static_budget(net.n_in),
+        "seconds_per_pass": best,
+        "samples_per_sec": batch / best,
+    }
+    rows.append((
+        "event/compose-shard",
+        best * 1e6,
+        f"samples_per_sec={batch / best:.1f};n_shards={dmesh.n_shards}",
+    ))
+
+    # --- event x serve: sparse stream through the jitted lane route --------
+    n_req = min(batch, 64)
+    rng = np.random.default_rng(7)
+    rasters = [
+        (rng.random((T, net.n_in)) < density).astype(np.int32) for _ in range(n_req)
+    ]
+    engine = SNNServeEngine(
+        net, qparams, max_batch=16, backend=backend, sparse_admission_threshold=0.10
+    )
+    engine.warmup(T)
+    best = float("inf")
+    routes: dict = {}
+    for _ in range(repeats):
+        reqs = [SNNRequest(uid=i, raster=r) for i, r in enumerate(rasters)]
+        t0 = time.perf_counter()
+        done = engine.run(reqs)
+        best = min(best, time.perf_counter() - t0)
+        routes = {}
+        for r in done:
+            routes[r.route] = routes.get(r.route, 0) + 1
+    comp["event_x_serve"] = {
+        "n_requests": n_req,
+        "event_budget": engine._event_budget,
+        "routes": routes,
+        "seconds_per_pass": best,
+        "samples_per_sec": n_req / best,
+    }
+    rows.append((
+        "event/compose-serve",
+        best * 1e6,
+        f"samples_per_sec={n_req / best:.1f};routes={routes}",
+    ))
+    return comp

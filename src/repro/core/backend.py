@@ -27,8 +27,11 @@ runs a network.  Three backends ship here:
     Bit-exact to ``reference`` on every config (int32 accumulation is
     order-independent and the step dynamics are shared); transparently falls
     back to the dense window when a layer's traffic is too dense for the
-    gather to win, and to ``reference`` when invoked under an outer
-    ``jax.jit`` (no concrete spike counts to size the event budget from).
+    sparse path to win.  Three strategies: ``"csr"`` (host scipy, the eager
+    CPU champion), ``"gather"`` (jnp masked gather), and ``"pallas"`` (the
+    jit-compatible fixed-capacity event path through
+    ``repro.kernels.sparse_accum`` -- the one that composes with
+    ``shard_map`` and the serving engine's jitted lane tick).
 
 Fused-path coverage matrix (per layer; ineligible layers transparently run
 the reference step scan inside the fused traversal, so mixed networks work):
@@ -54,9 +57,11 @@ Adding a backend: subclass :class:`InferenceBackend`, implement ``run_int``
 Everything above ``network.run_int`` selects backends by name, so new
 execution strategies (multi-core mapping, event-driven, remote) plug in
 without touching callers.  A backend that sizes buffers from concrete data
-(like ``event``) sets ``jit_compatible = False``; callers that would wrap
-``run_int`` in their own ``jax.jit`` (e.g. ``eval_int``) then let the
-backend manage compilation itself.
+(like ``event``'s csr/gather strategies) sets ``jit_compatible = False``;
+callers that would wrap ``run_int`` in their own ``jax.jit`` (e.g.
+``eval_int``) then let the backend manage compilation itself, and sharding
+callers may ask for a jit-compatible stand-in via ``jit_surrogate`` before
+abandoning a mesh.
 
 This module also hosts the population-batched integer simulation used by
 the Flex-plorer's population DSE mode: a whole batch of precision
@@ -91,6 +96,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fixed_point import int_max
 from repro.core.snn_layer import (
     IntLayerParams,
     ResetMode,
@@ -107,6 +113,7 @@ from repro.core.snn_layer import (
 from repro.kernels.lif_scan.lif_scan import lif_scan
 from repro.kernels.lif_scan.ref import lif_scan_ref
 from repro.kernels.quant_matmul.spike_matmul import spike_integrate
+from repro.kernels.sparse_accum.ops import sparse_accum_currents
 
 __all__ = [
     "SimRecord",
@@ -216,6 +223,16 @@ class InferenceBackend:
 
     def run_float(self, net, params, spikes_in, spike_fn) -> SimRecord:
         raise NotImplementedError
+
+    def jit_surrogate(self, net, spikes_in) -> "InferenceBackend | None":
+        """A jit-compatible stand-in carrying this backend's numerics, or None.
+
+        Sharding callers (``run_int_sharded``) ask for one before abandoning
+        a multi-device mesh on a ``jit_compatible = False`` backend; returning
+        ``None`` means the backend is irreplaceably host-side and the caller
+        should fall back to the serial path.
+        """
+        return None
 
 
 class ReferenceBackend(InferenceBackend):
@@ -413,6 +430,38 @@ def _dense_layer_window(cfg, params: IntLayerParams, raster):
     return int_layer_window_from_currents(cfg, params, currents)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "budget", "f32_exact", "use_pallas", "interpret")
+)
+def _fixed_layer_window(
+    cfg, params: IntLayerParams, raster, budget, f32_exact, use_pallas, interpret
+):
+    """One layer's window through the fixed-capacity sparse accumulate.
+
+    ``budget`` is the static event budget (``None`` = the density fallback:
+    dense integration at the same lowering choices); ``f32_exact`` certifies
+    the f32 BLAS exactness bound for the off-TPU lowering (see
+    ``repro.kernels.sparse_accum.ops``).  Traceable end to end -- this is
+    the layer window the pallas strategy runs under an outer ``jax.jit`` /
+    ``shard_map``.
+    """
+    if budget is None:
+        if f32_exact:
+            currents = _ff_currents_f32_exact(raster, params.w_ff)
+        else:
+            currents = spike_integrate(raster, params.w_ff, use_pallas=False)
+    else:
+        currents = sparse_accum_currents(
+            raster,
+            params.w_ff,
+            budget,
+            f32_exact=f32_exact,
+            use_pallas=use_pallas,
+            interpret=interpret,
+        )
+    return int_layer_window_from_currents(cfg, params, currents)
+
+
 class EventBackend(InferenceBackend):
     """Event-driven layer-major traversal: integrate active rows, skip silence.
 
@@ -435,10 +484,39 @@ class EventBackend(InferenceBackend):
         n_out) work.  On CPU, XLA's gather/scatter lower to code that loses
         to its own dense matmul even at 5% density, so this is the strategy
         that actually realises the event-driven win there (the benchmark in
-        ``benchmarks/event_bench.py`` holds it to that).
+        ``benchmarks/event_bench.py`` holds it to that).  Host-side by
+        construction: ``jit_compatible = False``, raises under tracing.
+
+    ``"pallas"``
+        The jit-compatible fixed-capacity event path
+        (``repro.kernels.sparse_accum``): the raster is AER-encoded into a
+        static, lane-rounded event budget and scattered through the Pallas
+        kernel on TPU; off-TPU the identical int32 numerics run through the
+        budget-certified exact-f32 BLAS lowering (or the int einsum when
+        the certificate fails), so the strategy stays *faster than the
+        dense int path* while remaining a single traceable program.  This
+        is the strategy that survives ``jax.jit`` / ``shard_map`` / the
+        serving engine's jitted lane tick: ``jit_compatible = True``.
 
     ``"auto"`` (default) picks ``gather`` on TPU and ``csr`` elsewhere when
-    scipy is available.
+    scipy is available -- the eager champions -- and promotes to
+    ``"pallas"`` whenever ``run_int`` is invoked under tracing, so
+    ``backend="event"`` composes with outer ``jax.jit`` / ``vmap`` without
+    losing sparsity.
+
+    ``event_budget`` (optional static int) pins the layer-0 event budget for
+    the traced pallas path, where there are no concrete spike counts to
+    measure; unset, tracing uses full capacity for safety and eager runs
+    measure per layer.  It is a *capacity contract*: callers guarantee no
+    (step, sample) row carries more active channels than the budget (the
+    serving engine enforces this at admission; ``jit_surrogate`` measures it
+    from the concrete rasters).  ``input_max_val`` (static int, default 1 =
+    binary spike rasters, the repo-wide raster contract) bounds input values
+    for the same traced path: together with the budget it certifies the
+    exact-f32 lowering (``input_max_val * budget * int_max(w_bits) <
+    2**24``); graded rasters above the declared bound fall back to the
+    exact int einsum.  Deeper layers need no declaration -- phase-B spikes
+    are {0,1}, which certifies every supported core size.
 
     Bit-exact to ``reference`` on every neuron model x topology x reset mode
     (asserted by the parity suite): both strategies compute the identical
@@ -450,21 +528,27 @@ class EventBackend(InferenceBackend):
     * density: a layer whose event budget exceeds ``dense_threshold * n_in``
       runs the dense window instead (sparse indirection loses to the dense
       matmul well below 100% density);
-    * tracing: under an outer ``jax.jit`` there are no concrete spike counts
-      to size budgets from, so the whole run delegates to ``reference``
-      (callers that honor ``jit_compatible = False`` never hit this).
+    * tracing: under an outer ``jax.jit`` / ``vmap`` the csr and gather
+      strategies have no concrete spike counts to size buffers from, so
+      ``auto`` (and ``gather``) promote to the fixed-capacity pallas path
+      -- still bit-exact, still one compiled program.  An *explicitly*
+      selected ``csr`` raises instead: host-side scipy cannot trace.
     """
 
     name = "event"
-    jit_compatible = False
+    jit_compatible = False  # class default; pallas instances override below
 
     def __init__(
         self,
         strategy: str = "auto",
         dense_threshold: float = 0.34,
         capacity_multiple: int = 16,
+        event_budget: int | None = None,
+        input_max_val: int = 1,
+        use_pallas: bool | None = None,
+        interpret: bool | None = None,
     ):
-        if strategy not in ("auto", "gather", "csr"):
+        if strategy not in ("auto", "gather", "csr", "pallas"):
             raise ValueError(f"unknown event strategy {strategy!r}")
         if strategy == "csr" and _scipy_sparse is None:
             raise ValueError("event strategy 'csr' needs scipy installed")
@@ -472,13 +556,46 @@ class EventBackend(InferenceBackend):
             raise ValueError(f"dense_threshold must be in (0, 1], got {dense_threshold}")
         if not isinstance(capacity_multiple, int) or capacity_multiple < 1:
             raise ValueError(f"capacity_multiple must be a positive int, got {capacity_multiple}")
+        if event_budget is not None and (not isinstance(event_budget, int) or event_budget < 1):
+            raise ValueError(f"event_budget must be a positive int or None, got {event_budget}")
+        if not isinstance(input_max_val, int) or input_max_val < 1:
+            raise ValueError(f"input_max_val must be a positive int, got {input_max_val}")
         self.strategy = strategy
         self.dense_threshold = dense_threshold
         self.capacity_multiple = capacity_multiple
+        self.event_budget = event_budget
+        self.input_max_val = input_max_val
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        # The fixed-capacity path is one traceable program; the measured
+        # eager strategies are not.
+        self.jit_compatible = strategy == "pallas"
 
-    def resolved_strategy(self) -> str:
+    # Value identity: backend instances ride through ``jax.jit`` static
+    # arguments (shard_map, the sharded eval path), so equal configurations
+    # must hash equal or every fresh instance would recompile the world.
+    def _static_key(self):
+        return (
+            self.strategy,
+            self.dense_threshold,
+            self.capacity_multiple,
+            self.event_budget,
+            self.input_max_val,
+            self.use_pallas,
+            self.interpret,
+        )
+
+    def __eq__(self, other):
+        return isinstance(other, EventBackend) and self._static_key() == other._static_key()
+
+    def __hash__(self):
+        return hash(self._static_key())
+
+    def resolved_strategy(self, traced: bool = False) -> str:
         if self.strategy != "auto":
             return self.strategy
+        if traced:
+            return "pallas"
         if jax.default_backend() == "tpu" or _scipy_sparse is None:
             return "gather"
         return "csr"
@@ -486,13 +603,54 @@ class EventBackend(InferenceBackend):
     def _budget(self, x_counts_max: int, cfg) -> int:
         return min(cfg.n_in, _round_capacity(x_counts_max, self.capacity_multiple))
 
+    def static_budget(self, n_in: int, k_max: int | None = None) -> int:
+        """The static lane-rounded event budget for a layer of width ``n_in``.
+
+        Priority: the configured ``event_budget`` (lane-rounded, capped at
+        ``n_in``), else the measured ``k_max``, else full capacity (the safe
+        traced default: every lowering stays exact, sparsity is just not
+        exploited until a budget is declared or measured).
+        """
+        if self.event_budget is not None:
+            k = self.event_budget
+        elif k_max is not None:
+            k = k_max
+        else:
+            return n_in
+        return min(n_in, _round_capacity(k, self.capacity_multiple))
+
+    def serve_budget(self, n_in: int, admission_threshold: float) -> int:
+        """The event budget a serving engine compiles its sparse lane program at.
+
+        The configured ``event_budget`` wins; otherwise 2x the admission
+        density (lane-rounded) -- room for a request's max *step* to run
+        twice as hot as its admission-checked *mean* without re-routing.
+        """
+        if self.event_budget is not None:
+            return self.static_budget(n_in)
+        k = max(1, int(2 * admission_threshold * n_in))
+        return min(n_in, _round_capacity(k, self.capacity_multiple))
+
+    def _f32_certified(self, cfg, budget: int | None, max_val: int) -> bool:
+        """True when the budget bound certifies the exact-f32 lowering."""
+        rows = cfg.n_in if budget is None else min(budget, cfg.n_in)
+        return int_max(cfg.w_bits) * rows * max_val < 2**24
+
     def run_int(self, net, qparams, spikes_in) -> SimRecord:
         x = jnp.asarray(spikes_in)
-        if isinstance(x, jax.core.Tracer):
-            return ReferenceBackend().run_int(net, qparams, spikes_in)
+        traced = isinstance(x, jax.core.Tracer)
+        strategy = self.resolved_strategy(traced=traced)
+        if traced and strategy == "csr":
+            raise ValueError(
+                "event strategy 'csr' is host-side (scipy) and cannot run under "
+                "jit/vmap tracing; use strategy='pallas' (the jit-compatible "
+                "fixed-capacity path) or call it eagerly"
+            )
         x = x.astype(jnp.int32)
-        if self.resolved_strategy() == "csr":
+        if strategy == "csr":
             return self._run_int_csr(net, qparams, np.asarray(x))
+        if strategy == "pallas" or traced:
+            return self._run_int_fixed(net, qparams, x, traced)
         input_events = jnp.sum(x != 0, axis=-1)
         emitted = []
         for cfg, p in zip(net.layers, qparams):
@@ -506,6 +664,69 @@ class EventBackend(InferenceBackend):
         counts = jnp.sum(x, axis=0)
         return SimRecord(
             spike_counts=counts, layer_spikes=emitted, input_events=input_events
+        )
+
+    def _run_int_fixed(self, net, qparams, x, traced: bool) -> SimRecord:
+        """The fixed-capacity (pallas-strategy) traversal.
+
+        Eager runs measure per-layer budgets and input magnitude exactly as
+        the gather strategy does; traced runs take the static budget
+        (``static_budget``) and the declared ``input_max_val`` for layer 0,
+        full capacity for deeper layers (phase-B spikes are {0,1}, so the
+        f32 certificate holds at any supported size).  Either way every
+        layer is one traceable ``_fixed_layer_window`` call -- the whole run
+        composes with an outer ``jax.jit`` / ``shard_map``.
+        """
+        input_events = jnp.sum(x != 0, axis=-1)
+        emitted = []
+        max_val = self.input_max_val if traced else max(1, int(jnp.max(x)))
+        for i, (cfg, p) in enumerate(zip(net.layers, qparams)):
+            if traced:
+                budget = self.static_budget(cfg.n_in) if i == 0 else cfg.n_in
+            else:
+                k_max = int(jnp.max(jnp.sum(x != 0, axis=-1)))
+                budget = self.static_budget(cfg.n_in, k_max=k_max)
+            if budget > self.dense_threshold * cfg.n_in:
+                budget = None  # density fallback: dense lowering, same numerics
+            f32_ok = self._f32_certified(cfg, budget, max_val)
+            x = _fixed_layer_window(
+                cfg, p, x, budget, f32_ok, self.use_pallas, self.interpret
+            )
+            emitted.append(jnp.sum(x, axis=-1))  # [T, batch]
+            max_val = 1  # phase B emits {0,1}
+        counts = jnp.sum(x, axis=0)
+        return SimRecord(
+            spike_counts=counts, layer_spikes=emitted, input_events=input_events
+        )
+
+    def jit_surrogate(self, net, spikes_in) -> "EventBackend | None":
+        """A pallas-strategy twin for sharding callers, or None for csr.
+
+        ``auto``/``gather``/``pallas`` all carry identical numerics through
+        the fixed-capacity path, so a mesh partition need not be abandoned:
+        the surrogate pins the layer-0 budget (configured, else measured
+        from the concrete rasters -- lane-rounding bounds the number of
+        distinct compiled programs) and the measured input magnitude.  An
+        *explicit* ``csr`` selection is an opt-in to the host-side path and
+        returns None: the caller warns and runs serially.
+        """
+        if self.strategy == "csr":
+            return None
+        budget = self.event_budget
+        input_max_val = self.input_max_val
+        x = jnp.asarray(spikes_in)
+        if not isinstance(x, jax.core.Tracer):
+            if budget is None:
+                budget = max(1, int(jnp.max(jnp.sum(x != 0, axis=-1))))
+            input_max_val = max(input_max_val, int(jnp.max(x)))
+        return EventBackend(
+            strategy="pallas",
+            dense_threshold=self.dense_threshold,
+            capacity_multiple=self.capacity_multiple,
+            event_budget=budget,
+            input_max_val=input_max_val,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
         )
 
     def _run_int_csr(self, net, qparams, x: np.ndarray) -> SimRecord:
@@ -720,9 +941,16 @@ def _ff_currents_f32_exact(x, w_ff):
     return cur.astype(jnp.int32).reshape(T, B, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("net", "ff_mode"))
+@functools.partial(jax.jit, static_argnames=("net", "ff_mode", "event_budget"))
 def batched_lane_window(
-    net, qparams, states, x_chunk, reset_mask, valid_steps=None, ff_mode="int32"
+    net,
+    qparams,
+    states,
+    x_chunk,
+    reset_mask,
+    valid_steps=None,
+    ff_mode="int32",
+    event_budget=None,
 ):
     """Advance every lane by ``k`` time steps through the whole core stack.
 
@@ -770,6 +998,15 @@ def batched_lane_window(
     checked* ``max_spike_value * n_in * int_max(w_bits) < 2**24`` for every
     layer (the serving engine checks this per network and per request;
     deeper layers always qualify because phase-B spikes are {0,1}).
+
+    ``event_budget`` (static) routes *layer 0* through the fixed-capacity
+    sparse event path (``repro.kernels.sparse_accum``) at that budget: the
+    Pallas AER scatter on TPU, the budget-certified exact-f32 lowering
+    elsewhere.  The caller guarantees the capacity contract -- every active
+    lane's chunk rows carry at most ``event_budget`` active channels with
+    ``max_spike_value * event_budget * int_max(l0.w_bits) < 2**24`` (the
+    serving engine enforces both at admission, see the ``"event-pallas"``
+    route).  Deeper layers follow ``ff_mode`` as usual.
     """
     states = jax.tree.map(
         lambda a: jnp.where(reset_mask[:, None], jnp.zeros_like(a), a), states
@@ -777,8 +1014,10 @@ def batched_lane_window(
     k = x_chunk.shape[0]
     x = x_chunk.astype(jnp.int32)
     new_states, emitted = [], []
-    for cfg, p, st in zip(net.layers, qparams, states):
-        if ff_mode == "f32_exact":
+    for li, (cfg, p, st) in enumerate(zip(net.layers, qparams, states)):
+        if li == 0 and event_budget is not None:
+            currents = sparse_accum_currents(x, p.w_ff, min(event_budget, cfg.n_in))
+        elif ff_mode == "f32_exact":
             currents = _ff_currents_f32_exact(x, p.w_ff)
         else:
             currents = spike_integrate(x, p.w_ff, use_pallas=False)
@@ -794,14 +1033,15 @@ def batched_lane_window(
     return new_states, out_spikes, emitted
 
 
-def batched_lane_tick(net, qparams, states, x_t, reset_mask):
+def batched_lane_tick(net, qparams, states, x_t, reset_mask, event_budget=None):
     """Single-step convenience form of :func:`batched_lane_window`.
 
     Returns ``(states, out_spikes [n_lanes, n_classes], emitted
-    [n_layers, n_lanes])`` for one tick.
+    [n_layers, n_lanes])`` for one tick.  ``event_budget`` routes layer 0
+    through the fixed-capacity sparse path, same contract as the window form.
     """
     states, out, emitted = batched_lane_window(
-        net, qparams, states, x_t[None], reset_mask
+        net, qparams, states, x_t[None], reset_mask, event_budget=event_budget
     )
     return states, out[0], emitted[0]
 

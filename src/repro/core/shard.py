@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -222,24 +223,37 @@ def run_int_sharded(
     up to the shard multiple and sliced back.  ``mesh`` resolving to one
     device (or ``None``) runs the serial backend directly.
 
-    The backend must be ``jit_compatible`` (the event backend sizes buffers
-    from concrete spike counts and cannot trace under ``shard_map``);
-    callers that accept arbitrary backends should fall back to serial for
-    those -- ``eval_int`` does.
+    A ``jit_compatible = False`` backend is asked for a ``jit_surrogate``
+    before any mesh partition is abandoned: ``backend="event"`` (auto /
+    gather / pallas) shards through the fixed-capacity pallas strategy with
+    a budget measured from the concrete rasters, bit-exact with its serial
+    run.  Only a backend with no surrogate (an *explicit* ``strategy="csr"``
+    opt-in to the host-side path) falls back to the serial run -- with a
+    ``UserWarning``, and only when a real multi-device partition is being
+    given up (a 1-device mesh honors ``jit_compatible = False`` silently:
+    the serial path was the contract anyway).
     """
     dmesh = resolve_mesh(mesh)
     resolved = get_backend(backend)
     spikes = jnp.asarray(spikes_in)
     if dmesh is None or dmesh.n_shards == 1:
-        if not resolved.jit_compatible:  # e.g. event: compiles internally
+        if not resolved.jit_compatible:  # e.g. event csr: compiles internally
             return resolved.run_int(net, list(qparams), spikes)
         counts, layers, in_ev = _run_int_serial_jit(net, list(qparams), spikes, resolved)
         return SimRecord(spike_counts=counts, layer_spikes=list(layers), input_events=in_ev)
     if not resolved.jit_compatible:
-        raise ValueError(
-            f"backend {resolved.name!r} is not jit-compatible and cannot run "
-            "under shard_map; use the serial path for it"
-        )
+        surrogate = resolved.jit_surrogate(net, spikes)
+        if surrogate is None:
+            warnings.warn(
+                f"backend {resolved.name!r} is not jit-compatible and offers no "
+                f"jit surrogate; mesh ignored ({dmesh.n_shards} shards abandoned "
+                "for the serial path). The event backend's strategy='pallas' "
+                "shards; strategy='csr' is host-side by design.",
+                UserWarning,
+                stacklevel=2,
+            )
+            return resolved.run_int(net, list(qparams), spikes)
+        resolved = surrogate
     B = spikes.shape[1]
     padded = pad_to_shards(spikes, dmesh, axis=1)
     counts, layers, in_ev = _run_int_sharded_jit(net, list(qparams), padded, dmesh, resolved)

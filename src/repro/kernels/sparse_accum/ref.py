@@ -1,0 +1,31 @@
+"""Reference semantics for the fixed-capacity sparse accumulate.
+
+The contract the Pallas kernel in ``sparse_accum.py`` is held to: given a
+fixed-capacity AER event list -- per output row, ``K`` (value, source
+channel) slots, zero-valued slots being padding -- accumulate the selected
+quantized weight rows into an exact int32 current vector:
+
+    out[e] = sum_j vals[e, j] * w_q[idx[e, j]]
+
+int32 addition is associative mod 2**32, so any accumulation order (the
+kernel's event loop, this einsum's reduction, a dense matmul over the
+raster the events were compacted from) produces bit-identical results --
+including on wraparound.  Padding slots carry ``vals == 0`` and therefore
+contribute exact zeros regardless of their ``idx``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_accum_ref(vals, idx, w_q):
+    """Exact int32 event-list accumulation (jnp oracle).
+
+    ``vals`` int [E, K] per-slot spike values (0 = padding);
+    ``idx``  int [E, K] per-slot source channel (any in-range value for
+    padding slots); ``w_q`` int [n_in, N] quantized weight table.
+    Returns int32 [E, N].
+    """
+    rows = w_q.astype(jnp.int32)[idx]  # [E, K, N]
+    return jnp.einsum("ek,ekn->en", vals.astype(jnp.int32), rows)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fixed-capacity sparse event accumulation.
+
+The event-driven integration phase of a Flexi-NeurA core is an AER
+scatter: each input event (value, source channel) selects one quantized
+weight row and adds ``value * row`` into the membrane-current accumulator.
+Dynamic event counts don't trace, so the kernel consumes the *fixed-
+capacity* formulation event-based accelerators use: every output row gets
+``K`` event slots (K = the static, lane-rounded event budget), real events
+compacted to the front, padding slots carrying value 0.
+
+Grid is (E / be, N / bn): each program instance owns a [be, bn] output
+tile plus its [be, K] event-list slice and the full weight table's [n_in,
+bn] column block, zeroes its accumulator tile, then walks the ``be * K``
+event slots scattering weight-row slices into it (``pl.when`` skips the
+zero-valued padding slots, so per-tile work tracks real traffic).  Exact
+int32 accumulation with the same wraparound semantics as the dense matmul:
+int32 addition is order-independent, so for any sufficient budget the
+result is bit-identical to ``spikes @ w_q``.
+
+Accumulation headroom mirrors ``spike_matmul``: |w| < 2**15 and at most
+n_in <= 256 events per row, so binary-spike reductions stay below 2**23.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, idx_ref, w_ref, o_ref, *, be, cap):
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    def body(e, carry):
+        r = e // cap  # output row within this tile
+        j = e % cap  # event slot within that row
+        v = vals_ref[r, j]
+        c = idx_ref[r, j]
+
+        @pl.when(v != 0)
+        def _scatter():
+            row = pl.load(w_ref, (pl.ds(c, 1), slice(None)))  # [1, bn]
+            cur = pl.load(o_ref, (pl.ds(r, 1), slice(None)))
+            pl.store(o_ref, (pl.ds(r, 1), slice(None)), cur + v * row)
+
+        return carry
+
+    jax.lax.fori_loop(0, be * cap, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("be", "bn", "interpret"))
+def sparse_accum(
+    vals,  # int [E, K] per-slot event values (0 = padding)
+    idx,  # int [E, K] per-slot source channels
+    w_q,  # int [n_in, N] quantized weight table
+    *,
+    be: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+):
+    """Exact int32 ``sum_j vals[e, j] * w_q[idx[e, j]]``. E, N tile by (be, bn)."""
+    E, K = vals.shape
+    n_in, N = w_q.shape
+    be, bn = min(be, E), min(bn, N)
+    if E % be or N % bn:
+        raise ValueError(f"event list ({E}) x outputs ({N}) must tile by ({be}, {bn})")
+    return pl.pallas_call(
+        functools.partial(_kernel, be=be, cap=K),
+        grid=(E // be, N // bn),
+        in_specs=[
+            pl.BlockSpec((be, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((be, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((be, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, N), jnp.int32),
+        interpret=interpret,
+    )(vals.astype(jnp.int32), idx.astype(jnp.int32), w_q.astype(jnp.int32))

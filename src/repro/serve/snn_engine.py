@@ -15,13 +15,16 @@ at a time through ``run_int``:
   following tick (continuous batching -- no head-of-line blocking on long
   windows).
 * Serving with ``backend="event"`` adds a density-based **admission
-  policy**: a request whose input density is at or below
+  policy**: with an eager strategy (scipy CSR on CPU, masked gather on
+  TPU) a request whose input density is at or below
   ``sparse_admission_threshold`` is routed straight through the event
-  backend's sparse path (scipy CSR on CPU, masked gather on TPU -- where
-  per-sample sparse traversal beats dense batching, see
-  ``EXPERIMENTS.md``), while dense requests go to the batched lane pool.
-  Both routes are bit-exact, so routing is a latency knob, not an accuracy
-  knob.
+  backend's sparse path one sample at a time, while dense requests go to
+  the batched lane pool.  With the jit-compatible ``strategy="pallas"``
+  there is no out-of-jit detour: sparse requests stay *in* the lane pool
+  (route ``"event-pallas"``) and the jitted chunk advance itself takes the
+  fixed-capacity sparse path for layer 0 whenever every active lane fits
+  the static event budget.  All routes are bit-exact, so routing is a
+  latency knob, not an accuracy knob.
 * Every completed request reports wall-clock latency (arrival ->
   completion, queueing included) plus the modeled hardware operating point
   at its *measured* event traffic: the per-request ``SimRecord``-shaped
@@ -91,7 +94,7 @@ class SNNRequest:
     # -- filled by the engine on completion ---------------------------------
     spike_counts: np.ndarray | None = None  # [n_classes] output spike totals
     prediction: int | None = None
-    route: str | None = None  # "lanes" | "event-csr" | "event-gather"
+    route: str | None = None  # "lanes" | "event-csr" | "event-gather" | "event-pallas"
     latency_s: float | None = None  # completion - arrival (queueing included)
     service_s: float | None = None  # completion - admission
     _arrival_wall: float | None = dataclasses.field(default=None, repr=False)
@@ -100,6 +103,7 @@ class SNNRequest:
     _stats: dict | None = dataclasses.field(default=None, repr=False)
     _design: hw_model.DesignPoint | None = dataclasses.field(default=None, repr=False)
     _max_val: int = dataclasses.field(default=0, repr=False)
+    _max_step_events: int = dataclasses.field(default=0, repr=False)
 
     def __post_init__(self):
         self.raster = np.asarray(self.raster)
@@ -122,6 +126,9 @@ class SNNRequest:
         # cached: the raster is immutable once submitted, and the admission
         # policy re-reads density on every dispatch round
         self._density = float(np.count_nonzero(self.raster)) / max(1, self.raster.size)
+        # max active channels in any single step: the sparse lane route's
+        # capacity check (the event budget bounds a *step*, not the mean)
+        self._max_step_events = int(np.count_nonzero(self.raster, axis=-1).max(initial=0))
 
     @property
     def n_steps(self) -> int:
@@ -176,9 +183,13 @@ class SNNRequest:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("net", "ff_mode", "dmesh"), donate_argnums=(2,)
+    jax.jit,
+    static_argnames=("net", "ff_mode", "dmesh", "event_budget"),
+    donate_argnums=(2,),
 )
-def _lane_window_packed(net, qparams, states, x_chunk, lane_meta, ff_mode, dmesh=None):
+def _lane_window_packed(
+    net, qparams, states, x_chunk, lane_meta, ff_mode, dmesh=None, event_budget=None
+):
     """``batched_lane_window`` with packed aux input and packed output.
 
     Serving throughput on CPU/edge hosts is bounded by host<->device
@@ -197,11 +208,25 @@ def _lane_window_packed(net, qparams, states, x_chunk, lane_meta, ff_mode, dmesh
     device owns ``n_lanes / n_shards`` resident lanes and one dispatch
     advances every shard (see ``repro.core.shard.wrap_lane_window``).
     ``None`` keeps the single-device program.
+
+    ``event_budget`` (static) routes layer 0 through the fixed-capacity
+    sparse event path at that budget (see ``batched_lane_window``); the
+    engine only passes it on ticks where every active lane satisfies the
+    capacity + exactness contract, so the sparse program is bit-exact with
+    the dense one.  It composes with ``dmesh``: the budget is a python
+    static inside the shard-mapped body.
     """
 
     def body(qp, st, x, meta):
         st, out, emitted = batched_lane_window(
-            net, qp, st, x, meta[0] != 0, valid_steps=meta[1], ff_mode=ff_mode
+            net,
+            qp,
+            st,
+            x,
+            meta[0] != 0,
+            valid_steps=meta[1],
+            ff_mode=ff_mode,
+            event_budget=event_budget,
         )
         packed = jnp.concatenate([out, jnp.transpose(emitted, (0, 2, 1))], axis=-1)
         return st, packed
@@ -231,8 +256,14 @@ class SNNServeEngine:
     (reference numerics -- every registered backend is held bit-exact to
     those, so the choice never moves outputs), and an
     :class:`~repro.core.backend.EventBackend` additionally enables the
-    density-based admission policy that routes sparse requests through its
-    sparse path one sample at a time.
+    density-based admission policy.  An eager strategy (csr / gather)
+    serves sparse requests through its host/eager sparse path one sample at
+    a time; the jit-compatible ``strategy="pallas"`` instead keeps sparse
+    requests in the lane pool (route ``"event-pallas"``) and lets the
+    jitted chunk advance take the fixed-capacity sparse path whenever the
+    whole active cohort fits the engine's static event budget
+    (``EventBackend.serve_budget``) -- event x serve as one compiled
+    program.
 
     ``tick_stride`` caps how many time steps one jitted call advances the
     lane pool: per-call dispatch overhead dominates the tiny per-step
@@ -324,10 +355,25 @@ class SNNServeEngine:
         # layers always integrate {0,1} phase-B spikes, so they only need
         # the static per-layer bound to hold.
         bound = 2**24 - 1
+        self._deep_f32_ok = all(int_max(c.w_bits) * c.n_in < bound for c in net.layers[1:])
         self._f32_input_max: int = 0
-        if all(int_max(c.w_bits) * c.n_in < bound for c in net.layers[1:]):
+        if self._deep_f32_ok:
             l0 = net.layers[0]
             self._f32_input_max = bound // (int_max(l0.w_bits) * l0.n_in)
+        # The jitted sparse lane route: with an event backend resolving to the
+        # pallas strategy, sparse requests stay in the lane pool and the
+        # chunk advance takes the fixed-capacity path for layer 0.  The
+        # budget doubles as the f32 exactness certificate: a request admits
+        # to the sparse route only when its max per-step active-channel
+        # count fits the budget AND its values stay under _sparse_val_max.
+        self._event_budget: int | None = None
+        self._sparse_val_max: int = 0
+        if self.event_backend is not None and self.event_backend.resolved_strategy() == "pallas":
+            l0 = net.layers[0]
+            self._event_budget = self.event_backend.serve_budget(
+                l0.n_in, sparse_admission_threshold
+            )
+            self._sparse_val_max = bound // (int_max(l0.w_bits) * self._event_budget)
 
     # -- introspection ------------------------------------------------------
     @property
@@ -355,9 +401,23 @@ class SNNServeEngine:
         self.queue.append(req)
 
     def _routes_to_event(self, req: SNNRequest) -> bool:
+        """Direct (out-of-jit) sparse route: eager csr/gather strategies only."""
         return (
             self.event_backend is not None
+            and self._event_budget is None
             and req.density <= self.sparse_admission_threshold
+        )
+
+    def _sparse_lane_eligible(self, req: SNNRequest) -> bool:
+        """Admission rule for the jitted ``"event-pallas"`` lane route:
+        sparse enough to be worth tagging, every step fits the static event
+        budget (the capacity contract), and values stay inside the budget's
+        f32 exactness certificate."""
+        return (
+            self._event_budget is not None
+            and req.density <= self.sparse_admission_threshold
+            and req._max_step_events <= self._event_budget
+            and req._max_val <= self._sparse_val_max
         )
 
     def _serve_event(self, req: SNNRequest) -> SNNRequest:
@@ -397,10 +457,10 @@ class SNNServeEngine:
             slot = self._free_lane() if not waiting else None
             if slot is None:
                 waiting.append(req)  # lanes full: keep FIFO among lane-bound
-                if self.event_backend is None:
-                    break  # no other route exists; stop scanning
+                if self.event_backend is None or self._event_budget is not None:
+                    break  # no direct route exists; stop scanning
                 continue
-            req.route = "lanes"
+            req.route = "event-pallas" if self._sparse_lane_eligible(req) else "lanes"
             self._lanes[slot] = _Lane(
                 req=req,
                 admitted_wall=now,
@@ -451,14 +511,34 @@ class SNNServeEngine:
             if lane.fresh:
                 meta[0, i] = 1
                 lane.fresh = False
-        ff_mode = (
-            "f32_exact"
-            if self._f32_input_max >= 1
-            and all(self._lanes[i].req._max_val <= self._f32_input_max for i in active)
-            else "int32"
+        # The sparse chunk program runs when every active lane honors the
+        # budget's capacity + exactness contract (checked per lane, not per
+        # route tag: a "lanes"-routed dense request that happens to fit the
+        # budget doesn't block the cohort).  Mixed cohorts with an
+        # over-budget lane fall back to the dense program -- still bit-exact.
+        budget = (
+            self._event_budget
+            if self._event_budget is not None
+            and all(
+                self._lanes[i].req._max_step_events <= self._event_budget
+                and self._lanes[i].req._max_val <= self._sparse_val_max
+                for i in active
+            )
+            else None
         )
+        if budget is not None:
+            # layer 0 goes through the sparse path; deeper layers integrate
+            # {0,1} phase-B spikes, needing only the static per-layer bound
+            ff_mode = "f32_exact" if self._deep_f32_ok else "int32"
+        else:
+            ff_mode = (
+                "f32_exact"
+                if self._f32_input_max >= 1
+                and all(self._lanes[i].req._max_val <= self._f32_input_max for i in active)
+                else "int32"
+            )
         self._states, packed = _lane_window_packed(
-            self.net, self.qparams, self._states, x, meta, ff_mode, self._dmesh
+            self.net, self.qparams, self._states, x, meta, ff_mode, self._dmesh, budget
         )
         packed = np.asarray(packed)  # [k, n_lanes, n_classes + n_layers]
         n_classes = self.net.n_classes
@@ -508,9 +588,13 @@ class SNNServeEngine:
         Compiles the power-of-two lane-window programs up to the chunk that
         covers ``n_steps`` (default: the network's nominal window) by
         running zero-input, zero-validity chunks through the pool, plus the
-        event backend's sparse route when it is enabled.  Call once before
-        measuring or serving latency-sensitive traffic; without it the
-        first cohorts pay jit compilation inside their reported latency.
+        event backend's sparse route when one is enabled: the eager (csr /
+        gather) direct route gets a zero-raster single-sample run, and the
+        jitted pallas route gets the sparse lane program precompiled *at
+        each power-of-two chunk*, so the first sparse admission never pays
+        compile latency mid-traffic.  Call once before measuring or serving
+        latency-sensitive traffic; without it the first cohorts pay jit
+        compilation inside their reported latency.
 
         The default covers binary/uint8 spike streams (the common case).
         Pass ``include_int32=True`` when the workload also carries graded
@@ -528,17 +612,26 @@ class SNNServeEngine:
             enable_compilation_cache(compilation_cache_dir)
         T = self.net.n_steps if n_steps is None else n_steps
         cap = self._chunk_cap()
-        combos = [(np.uint8, "f32_exact" if self._f32_input_max >= 1 else "int32")]
+        combos = [(np.uint8, "f32_exact" if self._f32_input_max >= 1 else "int32", None)]
+        if self._event_budget is not None:
+            combos.append(
+                (
+                    np.uint8,
+                    "f32_exact" if self._deep_f32_ok else "int32",
+                    self._event_budget,
+                )
+            )
         if include_int32:
-            combos += [(np.uint8, "int32"), (np.int32, "int32")]
-        for dtype, ff_mode in dict.fromkeys(combos):
+            combos += [(np.uint8, "int32", None), (np.int32, "int32", None)]
+        for dtype, ff_mode, budget in dict.fromkeys(combos):
             k = 1
             while True:
                 kk = min(k, cap)
                 x = np.zeros((kk, self.max_batch, self.net.n_in), dtype)
                 meta = np.zeros((2, self.max_batch), np.int32)
                 self._states, packed = _lane_window_packed(
-                    self.net, self.qparams, self._states, x, meta, ff_mode, self._dmesh
+                    self.net, self.qparams, self._states, x, meta, ff_mode,
+                    self._dmesh, budget,
                 )
                 np.asarray(packed)
                 if kk == cap or k >= T:
@@ -547,7 +640,7 @@ class SNNServeEngine:
         # zero-validity chunks record nothing, but they did advance the pool
         # states; reset so the next admission starts from a clean pool
         self._states = batched_lane_init(self.net, self.max_batch)
-        if self.event_backend is not None:
+        if self.event_backend is not None and self._event_budget is None:
             req = SNNRequest(uid=-1, raster=np.zeros((T, self.net.n_in), np.uint8))
             self._serve_event(req)
             self.n_served -= 1

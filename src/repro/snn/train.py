@@ -204,20 +204,14 @@ def eval_int(
 
     ``mesh`` (``None`` | ``"auto"`` | int | ``repro.core.shard.DeviceMesh``)
     spreads each batch's sample axis across devices -- bit-exact with the
-    serial path (see ``repro.core.shard``).  Backends that are not
-    jit-compatible cannot shard; they warn and run serially.
+    serial path (see ``repro.core.shard``).  A non-jit-compatible backend
+    shards through its ``jit_surrogate`` when it has one (``backend="event"``
+    upgrades to the fixed-capacity pallas strategy per batch); only a
+    backend with no surrogate (event ``strategy="csr"``) warns -- from
+    ``run_int_sharded``, once per process -- and runs serially.
     """
     resolved = backend_lib.get_backend(backend)
     dmesh = shard_lib.resolve_mesh(mesh)
-    if dmesh is not None and dmesh.n_shards > 1 and not resolved.jit_compatible:
-        import warnings
-
-        warnings.warn(
-            f"eval_int: backend {resolved.name!r} sizes buffers from concrete "
-            "data and cannot run under shard_map; mesh ignored",
-            stacklevel=2,
-        )
-        dmesh = None
 
     if dmesh is not None and dmesh.n_shards > 1:
         def fwd(spikes):

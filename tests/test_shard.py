@@ -17,6 +17,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro.core import shard
-from repro.core.backend import run_int_batched
+from repro.core.backend import EventBackend, run_int_batched
 from repro.core.network import (
     NetworkConfig,
     init_float_params,
@@ -137,16 +138,40 @@ def test_run_int_sharded_recurrent_and_synaptic():
         )
 
 
-def test_run_int_sharded_rejects_non_jit_backend():
+def test_run_int_sharded_event_backend_shards_or_warns():
+    """event x mesh: auto/gather/pallas shard via the pallas surrogate; only
+    an explicit csr opt-in abandons the mesh -- with a warning, and only
+    when a real multi-device partition is being given up."""
     net = _make_net()
     _, qparams = _quantized(net)
     spikes = _spikes(6, 4)
-    # with one device the fallback serves the event backend unjitted
-    rec = shard.run_int_sharded(net, qparams, spikes, 1, backend="event")
-    _assert_records_equal(run_int(net, qparams, spikes), rec)
+    ref = run_int(net, qparams, spikes)
+    # a 1-device mesh honors jit_compatible=False silently: the serial path
+    # was the contract anyway, so there is no partition to warn about
+    for backend in ["event", EventBackend("csr")]:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            rec = shard.run_int_sharded(net, qparams, spikes, 1, backend=backend)
+        assert not [w for w in caught if "mesh ignored" in str(w.message)]
+        _assert_records_equal(ref, rec)
     if N_DEV > 1:
-        with pytest.raises(ValueError, match="not jit-compatible"):
-            shard.run_int_sharded(net, qparams, spikes, "auto", backend="event")
+        # auto upgrades to the jit-compatible pallas surrogate: a real
+        # sharded run, bit-exact, no warning
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            rec = shard.run_int_sharded(net, qparams, spikes, "auto", backend="event")
+        assert not [w for w in caught if "mesh ignored" in str(w.message)]
+        _assert_records_equal(ref, rec)
+        rec = shard.run_int_sharded(
+            net, qparams, spikes, "auto", backend=EventBackend("pallas")
+        )
+        _assert_records_equal(ref, rec)
+        # explicit csr is host-side by design: warn, run serially, stay exact
+        with pytest.warns(UserWarning, match="mesh ignored"):
+            rec = shard.run_int_sharded(
+                net, qparams, spikes, "auto", backend=EventBackend("csr")
+            )
+        _assert_records_equal(ref, rec)
 
 
 def test_run_float_sharded_bit_exact():
@@ -184,11 +209,21 @@ def test_eval_int_event_backend_mesh_warns_and_matches():
     ds = mnist_like(n=24, T=6, seed=3)
     serial = eval_int(net, qparams, ds, batch_size=12, backend="event")
     if N_DEV > 1:
-        with pytest.warns(UserWarning, match="mesh ignored"):
+        # auto shards through the pallas surrogate: bit-exact, no warning
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
             sharded = eval_int(net, qparams, ds, batch_size=12, backend="event", mesh="auto")
+        assert not [w for w in caught if "mesh ignored" in str(w.message)]
+        assert serial == sharded
+        # explicit csr is host-side: warns and runs serially, same result
+        with pytest.warns(UserWarning, match="mesh ignored"):
+            csr = eval_int(
+                net, qparams, ds, batch_size=12, backend=EventBackend("csr"), mesh="auto"
+            )
+        assert serial == csr
     else:
         sharded = eval_int(net, qparams, ds, batch_size=12, backend="event", mesh="auto")
-    assert serial == sharded
+        assert serial == sharded
 
 
 def test_eval_float_mesh_matches_serial():
@@ -353,6 +388,20 @@ def test_forced_multidevice_parity_subprocess():
         b = shard.run_int_sharded(net, qp, spikes, "auto")
         np.testing.assert_array_equal(np.asarray(a.spike_counts), np.asarray(b.spike_counts))
         np.testing.assert_array_equal(np.asarray(a.input_events), np.asarray(b.input_events))
+        # event backend: auto shards through the pallas surrogate (no warning);
+        # explicit csr warns "mesh ignored" and runs serially -- both bit-exact
+        import warnings
+        from repro.core.backend import EventBackend
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            ev = shard.run_int_sharded(net, qp, spikes, "auto", backend="event")
+        assert not [w for w in caught if "mesh ignored" in str(w.message)]
+        np.testing.assert_array_equal(np.asarray(a.spike_counts), np.asarray(ev.spike_counts))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            cs = shard.run_int_sharded(net, qp, spikes, "auto", backend=EventBackend("csr"))
+        assert [w for w in caught if "mesh ignored" in str(w.message)]
+        np.testing.assert_array_equal(np.asarray(a.spike_counts), np.asarray(cs.spike_counts))
         print("SUBPROCESS_PARITY_OK")
         """
     )

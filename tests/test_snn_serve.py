@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.backend import run_int_batched
+from repro.core.backend import EventBackend, run_int_batched
 from repro.core.network import (
     NetworkConfig,
     init_float_params,
@@ -329,6 +329,70 @@ def test_non_event_backend_never_routes_to_event():
     sparse = (np.random.default_rng(6).random((9, net.n_in)) < 0.02).astype(np.int32)
     done = engine.run([SNNRequest(uid=0, raster=sparse)])
     assert done[0].route == "lanes"
+
+
+def test_event_pallas_lane_route_bit_exact():
+    """A pallas-strategy event backend keeps sparse requests in the lane
+    pool (route "event-pallas"); mixed sparse/dense cohorts share ticks and
+    every request stays bit-exact with the serial run."""
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(
+        net, qparams, max_batch=2, backend=EventBackend("pallas"),
+        sparse_admission_threshold=0.10,
+    )
+    assert engine._event_budget is not None
+    rng = np.random.default_rng(5)
+    sparse = [(rng.random((9, net.n_in)) < 0.04).astype(np.int32) for _ in range(3)]
+    dense = [(rng.random((9, net.n_in)) < 0.40).astype(np.int32) for _ in range(3)]
+    reqs = [SNNRequest(uid=i, raster=r) for i, r in enumerate(sparse + dense)]
+    done = engine.run(reqs)
+    by_uid = {r.uid: r for r in done}
+    assert all(by_uid[i].route == "event-pallas" for i in range(3))
+    assert all(by_uid[i].route == "lanes" for i in range(3, 6))
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
+
+
+def test_event_pallas_over_budget_request_takes_lane_route():
+    """A request whose max *step* outruns the static budget must not admit
+    to the sparse route (the fixed-capacity list would clamp events); it
+    serves through the dense lane path instead -- bit-exactly."""
+    net = _make_net()
+    qparams = _quantized(net)
+    backend = EventBackend("pallas", event_budget=2, capacity_multiple=1)
+    engine = SNNServeEngine(
+        net, qparams, max_batch=2, backend=backend, sparse_admission_threshold=0.10,
+    )
+    assert engine._event_budget == 2
+    hot = np.zeros((9, net.n_in), np.int32)
+    hot[0, :5] = 1  # one hot step: 5 events > budget 2, mean density still low
+    assert hot.mean() <= 0.10
+    done = engine.run([SNNRequest(uid=0, raster=hot)])
+    assert done[0].route == "lanes"
+    _assert_request_matches_serial(net, qparams, done[0])
+
+
+def test_event_pallas_warmup_precompiles_and_stays_clean():
+    """warmup() with a pallas event backend precompiles the sparse lane
+    program per chunk and leaves the engine idle; serving afterwards is
+    bit-exact on both routes."""
+    net = _make_net()
+    qparams = _quantized(net)
+    engine = SNNServeEngine(
+        net, qparams, max_batch=2, backend=EventBackend("pallas"),
+        sparse_admission_threshold=0.10,
+    )
+    engine.warmup()
+    assert not engine.in_flight and engine.n_served == 0
+    rng = np.random.default_rng(8)
+    sparse = (rng.random((9, net.n_in)) < 0.04).astype(np.int32)
+    dense = (rng.random((9, net.n_in)) < 0.40).astype(np.int32)
+    done = engine.run([SNNRequest(uid=0, raster=sparse), SNNRequest(uid=1, raster=dense)])
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].route == "event-pallas" and by_uid[1].route == "lanes"
+    for req in done:
+        _assert_request_matches_serial(net, qparams, req)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,321 @@
+"""Parity suite for the fixed-capacity sparse event path.
+
+Three layers of contract, each bit-exact int32:
+
+* kernel level -- the Pallas sparse-accumulate kernel (run on CPU via
+  ``interpret=True``) against its jnp oracle (``ref.py``) and against the
+  dense matmul the event list was compacted from;
+* op level -- every ``sparse_accum_currents`` lowering (kernel, certified
+  f32 BLAS, int einsum) agrees;
+* backend level -- ``EventBackend(strategy="pallas")`` against the
+  ``reference`` backend (and the measured ``csr`` strategy where scipy is
+  available) across neuron x topology x reset combos, zero-event windows,
+  and under ``jax.jit`` / ``vmap`` tracing where explicit csr raises.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_lib
+from repro.core.backend import EventBackend
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+    run_int,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel, ResetMode, Topology
+from repro.kernels.sparse_accum.ops import fixed_capacity_events, sparse_accum_currents
+from repro.kernels.sparse_accum.ref import sparse_accum_ref
+from repro.kernels.sparse_accum.sparse_accum import sparse_accum
+
+NEURONS = [NeuronModel.IF, NeuronModel.LIF]
+RESETS = [ResetMode.ZERO, ResetMode.SUBTRACT]
+
+_HAS_SCIPY = backend_lib._scipy_sparse is not None
+
+
+def _make_net(n_in, hidden, n_out, T, neuron, reset, topology=Topology.FF, **kw):
+    return NetworkConfig(
+        layers=(
+            LayerConfig(n_in=n_in, n_out=hidden, neuron=neuron, reset=reset,
+                        topology=topology, beta=0.9, **kw),
+            LayerConfig(n_in=hidden, n_out=n_out, neuron=neuron, reset=reset,
+                        beta=0.77, **kw),
+        ),
+        n_steps=T,
+    )
+
+
+def _quantized(net, seed=0):
+    params = init_float_params(jax.random.PRNGKey(seed), net)
+    qparams, _ = quantize_params(net, params)
+    return qparams
+
+
+def _spikes(net, T, batch, seed=1, rate=0.3):
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (T, batch, net.n_in))
+    return (u < rate).astype(jnp.int32)
+
+
+def _raster(E, n_in, seed=0, rate=0.15, max_val=1):
+    """Flat int raster [E, n_in] with values in {0, 1..max_val}."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    on = jax.random.uniform(k1, (E, n_in)) < rate
+    vals = jax.random.randint(k2, (E, n_in), 1, max_val + 1)
+    return jnp.where(on, vals, 0).astype(jnp.int32)
+
+
+def _weights(n_in, N, seed=2, lo=-500, hi=500):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n_in, N), lo, hi, jnp.int32)
+
+
+def _assert_records_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.spike_counts), np.asarray(b.spike_counts))
+    assert len(a.layer_spikes) == len(b.layer_spikes)
+    for x, y in zip(a.layer_spikes, b.layer_spikes):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.input_events is not None and b.input_events is not None
+    np.testing.assert_array_equal(np.asarray(a.input_events), np.asarray(b.input_events))
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: Pallas kernel vs jnp oracle vs dense matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "E,n_in,N", [(21, 19, 11), (512, 256, 256)], ids=["odd_single_tile", "multi_tile"]
+)
+@pytest.mark.parametrize("max_val", [1, 37], ids=["binary", "graded"])
+def test_kernel_matches_ref_and_dense(E, n_in, N, max_val):
+    """Kernel (interpret) == jnp oracle == dense matmul at sufficient budget."""
+    raster = _raster(E, n_in, rate=0.15, max_val=max_val)
+    w_q = _weights(n_in, N)
+    budget = int(jnp.max(jnp.sum(raster != 0, axis=-1)))
+    vals, idx = fixed_capacity_events(raster, budget)
+    got = sparse_accum(vals, idx, w_q, interpret=True)
+    oracle = sparse_accum_ref(vals, idx, w_q)
+    dense = raster @ w_q
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+def test_kernel_zero_events():
+    """An all-padding event list accumulates exact zeros."""
+    w_q = _weights(19, 11)
+    vals = jnp.zeros((7, 4), jnp.int32)
+    idx = jnp.full((7, 4), 3, jnp.int32)  # padding channel is ignored
+    got = sparse_accum(vals, idx, w_q, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((7, 11), np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(sparse_accum_ref(vals, idx, w_q)), np.zeros((7, 11), np.int32)
+    )
+
+
+def test_kernel_int32_wraparound_matches_dense():
+    """Accumulation past int32 range wraps identically to the dense matmul."""
+    n_in, N = 16, 8
+    raster = jnp.full((5, n_in), 3, jnp.int32)
+    w_q = jnp.full((n_in, N), 2**27, jnp.int32)  # 16 * 3 * 2**27 overflows
+    vals, idx = fixed_capacity_events(raster, n_in)
+    got = sparse_accum(vals, idx, w_q, interpret=True)
+    dense = raster @ w_q
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+    np.testing.assert_array_equal(np.asarray(sparse_accum_ref(vals, idx, w_q)), np.asarray(dense))
+
+
+def test_kernel_budget_overflow_clamps_to_top_k():
+    """Insufficient budget: kernel == ref == matmul over the budget-largest
+    values per row -- deterministic clamp, not garbage."""
+    E, n_in, N, budget = 6, 24, 10, 4
+    # distinct positive values per row so top-k selection is unambiguous
+    base = jnp.arange(1, n_in + 1, dtype=jnp.int32)
+    raster = jnp.stack([jnp.roll(base, r) for r in range(E)])
+    w_q = _weights(n_in, N)
+    vals, idx = fixed_capacity_events(raster, budget)
+    got = sparse_accum(vals, idx, w_q, interpret=True)
+    oracle = sparse_accum_ref(vals, idx, w_q)
+    # expected: zero all but each row's `budget` largest values, then dense
+    kept = np.asarray(raster).copy()
+    for r in range(E):
+        cut = np.sort(kept[r])[-budget]
+        kept[r][kept[r] < cut] = 0
+    expected = kept @ np.asarray(w_q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+    np.testing.assert_array_equal(np.asarray(got), expected)
+
+
+# ---------------------------------------------------------------------------
+# Op level: every sparse_accum_currents lowering agrees
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("max_val", [1, 11], ids=["binary", "graded"])
+def test_sparse_accum_currents_lowerings_agree(max_val):
+    T, B, n_in, N = 6, 4, 64, 32
+    raster = _raster(T * B, n_in, rate=0.1, max_val=max_val).reshape(T, B, n_in)
+    w_q = _weights(n_in, N)
+    budget = int(jnp.max(jnp.sum(raster != 0, axis=-1)))
+    dense = jnp.einsum("tbk,kn->tbn", raster, w_q)
+    f32 = sparse_accum_currents(raster, w_q, budget, f32_exact=True, use_pallas=False)
+    ints = sparse_accum_currents(raster, w_q, budget, f32_exact=False, use_pallas=False)
+    kern = sparse_accum_currents(raster, w_q, budget, use_pallas=True, interpret=True)
+    for got in (f32, ints, kern):
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+def test_sparse_accum_currents_jits():
+    """The op is one traceable program: budget is static, shapes are fixed."""
+    T, B, n_in, N = 5, 3, 32, 16
+    raster = _raster(T * B, n_in, rate=0.2).reshape(T, B, n_in)
+    w_q = _weights(n_in, N)
+
+    @jax.jit
+    def fwd(r):
+        return sparse_accum_currents(r, w_q, 16, use_pallas=False)
+
+    np.testing.assert_array_equal(
+        np.asarray(fwd(raster)), np.asarray(jnp.einsum("tbk,kn->tbn", raster, w_q))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend level: EventBackend(strategy="pallas") across the config grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("neuron", NEURONS)
+@pytest.mark.parametrize("reset", RESETS)
+@pytest.mark.parametrize("rate", [0.02, 0.1, 0.3], ids=["sparse2", "sparse10", "mid30"])
+def test_pallas_strategy_bit_exact_ff(neuron, reset, rate):
+    """pallas strategy == reference (and == csr) on IF/LIF x reset x sparsity."""
+    net = _make_net(19, 11, 5, 7, neuron, reset)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 7, 3, rate=rate)
+    ref = run_int(net, qparams, spikes)
+    pal = run_int(net, qparams, spikes, backend=EventBackend("pallas"))
+    _assert_records_equal(ref, pal)
+    if _HAS_SCIPY:
+        _assert_records_equal(pal, run_int(net, qparams, spikes, backend=EventBackend("csr")))
+
+
+@pytest.mark.parametrize(
+    "neuron,topology",
+    [
+        (NeuronModel.SYNAPTIC, Topology.FF),
+        (NeuronModel.LIF, Topology.ATA_F),
+        (NeuronModel.LIF, Topology.ATA_T),
+        (NeuronModel.SYNAPTIC, Topology.ATA_T),
+    ],
+    ids=["synaptic", "ata_f", "ata_t", "synaptic_ata_t"],
+)
+def test_pallas_strategy_covers_recurrent_and_synaptic(neuron, topology):
+    """The fixed-capacity path feeds the same shared step scan as the other
+    event strategies: recurrent and synaptic configs stay bit-exact."""
+    net = _make_net(17, 10, 6, 9, neuron, ResetMode.SUBTRACT, topology=topology)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 9, 4, rate=0.15)
+    ref = run_int(net, qparams, spikes)
+    pal = run_int(net, qparams, spikes, backend=EventBackend("pallas"))
+    _assert_records_equal(ref, pal)
+    if _HAS_SCIPY:
+        _assert_records_equal(pal, run_int(net, qparams, spikes, backend=EventBackend("csr")))
+
+
+def test_pallas_strategy_actual_kernel_interpret():
+    """Force the Pallas kernel itself (interpret on CPU) through the backend."""
+    net = _make_net(64, 32, 8, 6, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 6, 4, rate=0.1)
+    backend = EventBackend("pallas", use_pallas=True, interpret=True)
+    _assert_records_equal(
+        run_int(net, qparams, spikes), run_int(net, qparams, spikes, backend=backend)
+    )
+
+
+def test_pallas_strategy_zero_event_window():
+    """All-silent raster: budget sizing and the f32 certificate must hold."""
+    net = _make_net(16, 8, 4, 5, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    spikes = jnp.zeros((5, 3, 16), jnp.int32)
+    _assert_records_equal(
+        run_int(net, qparams, spikes),
+        run_int(net, qparams, spikes, backend=EventBackend("pallas")),
+    )
+
+
+def test_pallas_strategy_graded_input_stays_exact():
+    """Multi-bit input values: the f32 certificate accounts for magnitude
+    (falling back to the int einsum when it cannot certify)."""
+    net = _make_net(19, 11, 5, 6, NeuronModel.IF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    u = jax.random.uniform(jax.random.PRNGKey(4), (6, 3, 19))
+    vals = jax.random.randint(jax.random.PRNGKey(5), (6, 3, 19), 1, 1000, jnp.int32)
+    spikes = jnp.where(u < 0.2, vals, 0)
+    _assert_records_equal(
+        run_int(net, qparams, spikes),
+        run_int(net, qparams, spikes, backend=EventBackend("pallas")),
+    )
+
+
+def test_pallas_strategy_dense_fallback_bit_exact():
+    """Near-dense input trips the density fallback; numerics must not move."""
+    net = _make_net(19, 11, 5, 6, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 6, 3, rate=0.95)
+    backend = EventBackend("pallas", dense_threshold=0.3)
+    _assert_records_equal(
+        run_int(net, qparams, spikes), run_int(net, qparams, spikes, backend=backend)
+    )
+
+
+def test_pallas_strategy_is_jit_compatible():
+    assert EventBackend("pallas").jit_compatible
+    assert not EventBackend().jit_compatible
+    assert EventBackend().resolved_strategy(traced=True) == "pallas"
+
+
+def test_pallas_strategy_under_jit_and_vmap():
+    """One compiled program: the pallas strategy runs under jax.jit and vmap
+    and stays bit-exact; the declared event_budget caps layer-0 capacity."""
+    net = _make_net(32, 16, 8, 6, NeuronModel.LIF, ResetMode.ZERO)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 6, 4, rate=0.1)
+    expected = np.asarray(run_int(net, qparams, spikes).spike_counts)
+    backend = EventBackend("pallas", event_budget=16)
+
+    @jax.jit
+    def fwd(s):
+        return run_int(net, qparams, s, backend=backend).spike_counts
+
+    np.testing.assert_array_equal(np.asarray(fwd(spikes)), expected)
+
+    stacked = jnp.stack([spikes, spikes])
+    batched = jax.vmap(fwd)(stacked)
+    np.testing.assert_array_equal(np.asarray(batched[0]), expected)
+    np.testing.assert_array_equal(np.asarray(batched[1]), expected)
+
+
+@pytest.mark.skipif(not _HAS_SCIPY, reason="csr strategy needs scipy")
+def test_csr_strategy_raises_under_tracing():
+    """Explicit csr is host-side by design: tracing must fail loudly, not
+    silently fall back (auto promotes to pallas instead -- covered above)."""
+    net = _make_net(16, 8, 4, 5, NeuronModel.LIF, ResetMode.ZERO)
+    qparams = _quantized(net)
+    spikes = _spikes(net, 5, 2, rate=0.2)
+    backend = EventBackend("csr")
+
+    @jax.jit
+    def fwd(s):
+        return run_int(net, qparams, s, backend=backend).spike_counts
+
+    with pytest.raises(ValueError, match="cannot run under"):
+        fwd(spikes)
+    with pytest.raises(ValueError, match="cannot run under"):
+        jax.vmap(lambda s: run_int(net, qparams, s, backend=backend).spike_counts)(
+            jnp.stack([spikes])
+        )
