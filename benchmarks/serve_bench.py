@@ -7,14 +7,23 @@ LIF network:
 
 * **closed loop**: all requests queued up front; samples/sec per lane-pool
   size (``max_batch``), with the engine/serial speedup recorded per batch
-  (the acceptance number: >= 2x at batch >= 8);
+  (the ratio is host-dependent -- the regression gate tracks the absolute
+  samples/sec, not the ratio);
 * **offered load**: Poisson arrivals at fractions of the measured
   closed-loop capacity, replayed open-loop through ``SNNServeEngine.run``;
   reports p50/p99 request latency (queueing included) and achieved
   samples/sec -- the queueing-delay story serial execution cannot tell;
 * **event admission**: a mixed sparse/dense request stream served with
   ``backend="event"``, recording how many requests the density-based
-  admission policy routed to the sparse event path vs the lane pool.
+  admission policy routed to the sparse event path vs the lane pool;
+* **QoS sweep**: mixed-priority traffic (10% critical / 30% standard /
+  60% best-effort, per-class deadline SLOs) offered at 10-100x the
+  measured closed-loop capacity -- far past saturation, where the
+  front-line scheduler is the product.  Records per-class p50/p99
+  latency, the degrade/reject/preempt counts, and critical-class SLO
+  attainment: critical p99 must stay inside its deadline while
+  best-effort absorbs the overload by degrading to the registered
+  coarser precision tier or being rejected at admission.
 
 Serial and engine passes are timed in interleaved rounds, best round per
 contender (machine-load spikes land on both equally and are discarded),
@@ -40,6 +49,7 @@ import numpy as np
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
 from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
+from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy
 from repro.serve.snn_engine import SNNRequest, SNNServeEngine
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -48,6 +58,9 @@ FAST_OUT = _ROOT / "experiments" / "BENCH_serve_fast.json"
 
 BATCHES = (4, 8, 16)
 LOAD_FRACTIONS = (0.5, 0.8, 0.95)
+QOS_MULTIPLIERS = (10, 30, 100)
+# traffic mix for the overload sweep, indexed by Priority value
+QOS_MIX = (0.10, 0.30, 0.60)  # critical / standard / best_effort
 
 
 def _mnist_net(T: int) -> NetworkConfig:
@@ -79,6 +92,7 @@ def run(fast: bool = False):
     repeats = 5 if not fast else 2
     batches = BATCHES if not fast else (8,)
     fractions = LOAD_FRACTIONS if not fast else (0.8,)
+    qos_mults = QOS_MULTIPLIERS if not fast else (10,)
 
     net = _mnist_net(T)
     params = init_float_params(jax.random.PRNGKey(0), net)
@@ -117,6 +131,7 @@ def run(fast: bool = False):
         "engine_closed_loop": {},
         "offered_load": {},
         "event_admission": {},
+        "qos_sweep": {},
     }
     rows = [("serve/serial-run_int", best_serial * 1e6, f"samples_per_sec={serial_sps:.1f}")]
 
@@ -184,6 +199,98 @@ def run(fast: bool = False):
         wall * 1e6,
         f"event={n_event}/{len(mixed)};samples_per_sec={len(mixed) / wall:.1f}",
     ))
+
+    # QoS sweep: mixed-priority overload far past saturation.  Deadline SLOs
+    # are set relative to the measured closed-loop capacity (base_wall = time
+    # to serve the whole request set flat out), so the sweep measures the
+    # scheduler, not this host's absolute speed.
+    tier = PrecisionTier.from_params(net, params, w_bits=3, steps_fraction=0.5)
+    qos_eng = SNNServeEngine(
+        net, qparams, max_batch=mb_load,
+        scheduler=SchedPolicy(), precision_tiers=[tier],
+    )
+    qos_eng.warmup(T)
+    qos_eng.run(_requests(rasters[:4]))
+
+    base_wall = n / capacity
+    # per-class deadline SLOs, indexed by Priority value: critical must land
+    # well inside the drain window; best-effort's sits at the drain window
+    # itself, so under overload its keep-estimate fails and the deadline
+    # sweep degrades (or rejects) it instead of queueing past the SLO
+    slos = (0.5 * base_wall, 2.0 * base_wall, 1.0 * base_wall)
+    # seed the service estimate from measured capacity (steady-state ticks
+    # keep refining it): wall seconds per lane-step across the full pool
+    qos_eng.metrics.seed_step_estimate(mb_load / (capacity * T))
+    report["qos_sweep"] = {
+        "mix": {p.name.lower(): QOS_MIX[p.value] for p in Priority},
+        "deadline_slo_ms": {p.name.lower(): slos[p.value] * 1e3 for p in Priority},
+        "degrade_tier": tier.name,
+        "sweeps": {},
+    }
+    rng = np.random.default_rng(4)
+    prios = rng.choice(3, size=n, p=QOS_MIX)
+    for mult in qos_mults:
+        rate = capacity * mult
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+        reqs = [
+            SNNRequest(
+                uid=i, raster=rasters[i], arrival_s=arrivals[i],
+                priority=Priority(int(prios[i])), tenant=["a", "b"][i % 2],
+                deadline_s=slos[int(prios[i])],
+            )
+            for i in range(n)
+        ]
+        m0 = qos_eng.metrics
+        split0 = (m0.dispatch_s, m0.tick_s, m0.degrade_s)
+        t0 = time.perf_counter()
+        done = qos_eng.run(reqs)
+        wall = time.perf_counter() - t0
+        served = [r for r in done if r.status != "rejected"]
+
+        classes = {}
+        for p in Priority:
+            sub = [r for r in reqs if r.priority is p]
+            lat = np.asarray(
+                [r.latency_s for r in sub if r.status != "rejected"]
+            ) * 1e3
+            classes[p.name.lower()] = {
+                "requests": len(sub),
+                "completed": sum(r.status == "completed" for r in sub),
+                "degraded": sum(r.status == "degraded" for r in sub),
+                "rejected": sum(r.status == "rejected" for r in sub),
+                "p50_latency_ms": float(np.percentile(lat, 50)) if lat.size else None,
+                "p99_latency_ms": float(np.percentile(lat, 99)) if lat.size else None,
+            }
+        crit = [r for r in reqs if r.priority is Priority.CRITICAL]
+        in_slo = sum(
+            r.status != "rejected" and r.latency_s <= slos[Priority.CRITICAL.value]
+            for r in crit
+        )
+        crit_p99 = classes["critical"]["p99_latency_ms"]
+        entry = {
+            "offered_rate_per_sec": rate,
+            "served_per_sec": len(served) / wall,
+            "critical_slo_attainment": in_slo / max(len(crit), 1),
+            "critical_p99_meets_slo": bool(
+                crit_p99 is not None
+                and crit_p99 <= slos[Priority.CRITICAL.value] * 1e3
+            ),
+            "preempted_requests": sum(r.preemptions > 0 for r in reqs),
+            "classes": classes,
+            # scheduling vs compute attribution for this sweep
+            "dispatch_s": qos_eng.metrics.dispatch_s - split0[0],
+            "tick_s": qos_eng.metrics.tick_s - split0[1],
+            "degrade_s": qos_eng.metrics.degrade_s - split0[2],
+        }
+        report["qos_sweep"]["sweeps"][f"{mult}x"] = entry
+        rows.append((
+            f"serve/qos-{mult}x-batch{mb_load}",
+            wall * 1e6,
+            f"crit_p99_ms={crit_p99:.2f};crit_slo_attain={entry['critical_slo_attainment']:.3f}"
+            f";degraded={sum(r.status == 'degraded' for r in reqs)}"
+            f";rejected={sum(r.status == 'rejected' for r in reqs)}"
+            f";served_per_sec={entry['served_per_sec']:.1f}",
+        ))
 
     out = FAST_OUT if fast else OUT
     out.parent.mkdir(exist_ok=True)

@@ -925,6 +925,30 @@ def batched_lane_init(net, n_lanes: int) -> list:
     return [int_layer_init(cfg, n_lanes) for cfg in net.layers]
 
 
+def lane_state_take(states, lane: int) -> list:
+    """Snapshot one lane's per-layer carry out of a pool (host copy).
+
+    The preemption seam: ``states`` is the pool from
+    :func:`batched_lane_init` / :func:`batched_lane_window`; the returned
+    per-layer :class:`LayerState` slices (numpy, detached from the pool's
+    donated buffers) hold everything lane ``lane``'s trajectory needs to
+    resume later -- membrane, synaptic current, previous spikes.  Restoring
+    them with :func:`lane_state_put` and continuing the window from the
+    same local step is bit-exact with an uninterrupted run (lanes never
+    interact, so a lane's carry *is* its full simulation state).
+    """
+    return jax.tree.map(lambda a: np.asarray(a[lane]), states)
+
+
+def lane_state_put(states, lane: int, carry) -> list:
+    """Write a :func:`lane_state_take` snapshot back into a pool at
+    ``lane`` (any slot -- the carry is placement-independent).  Returns the
+    new pool states; other lanes are untouched."""
+    return jax.tree.map(
+        lambda a, v: a.at[lane].set(jnp.asarray(v, a.dtype)), states, carry
+    )
+
+
 def _ff_currents_f32_exact(x, w_ff):
     """Feed-forward chunk integration through the f32 BLAS path, bit-exactly.
 

@@ -11,13 +11,29 @@ arrival process at that many requests/sec (0 = closed loop, everything
 queued up front); ``--density`` switches the workload from mnist-like
 rasters to Bernoulli spike noise at the given density, which is how to
 exercise the event backend's sparse admission route.  Prints throughput,
-latency percentiles, per-route counts, and the modeled hardware operating
-point of a few sample requests.
+latency percentiles, per-route counts, the scheduler's QoS counters, and
+the modeled hardware operating point of a few sample requests.
+
+QoS knobs drive the front-line scheduler: ``--critical-frac`` /
+``--standard-frac`` split the workload across priority classes,
+``--deadline-ms`` attaches an SLO to critical+standard requests,
+``--degrade-bits`` registers coarser precision tiers that deadline
+degradation may serve (with ``--degrade-steps-frac`` truncating the
+window), and ``--no-preempt`` / ``--class-weights`` tune the admission
+policy.
+
+    PYTHONPATH=src python -m repro.launch.serve_snn --http 8080 \
+        --degrade-bits 4 3 --deadline-ms 50
+
+``--http`` skips the replay and serves the asyncio HTTP front-end instead
+(``POST /submit``, ``POST /stream``, ``GET /metrics``, ``GET /healthz`` --
+see ``repro.serve.http``); port 0 picks a free port and prints it.
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 
 import jax
 import numpy as np
@@ -25,7 +41,9 @@ import numpy as np
 from repro.core.network import NetworkConfig, init_float_params, quantize_params
 from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
-from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+from repro.serve.http import SNNHttpServer
+from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy
+from repro.serve.snn_engine import AsyncSNNServer, SNNRequest, SNNServeEngine
 
 
 def _build_net(hidden: int, T: int) -> NetworkConfig:
@@ -58,12 +76,39 @@ def main():
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent jax compilation cache directory "
                     "(restarted engines skip the warmup compiles)")
+    ap.add_argument("--critical-frac", type=float, default=0.0,
+                    help="fraction of requests submitted as CRITICAL")
+    ap.add_argument("--standard-frac", type=float, default=1.0,
+                    help="fraction submitted as STANDARD (remainder BEST_EFFORT)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="latency SLO attached to critical+standard requests")
+    ap.add_argument("--degrade-bits", type=int, nargs="*", default=[],
+                    help="register degradation tiers at these w_bits, finest first")
+    ap.add_argument("--degrade-steps-frac", type=float, default=1.0,
+                    help="window fraction the degradation tiers serve")
+    ap.add_argument("--class-weights", default="8,3,1",
+                    help="admission credits per DRR cycle: CRITICAL,STANDARD,BEST_EFFORT")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable CRITICAL preemption of running lanes")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the HTTP front-end on this port instead of "
+                    "replaying a workload (0 = pick a free port)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     net = _build_net(args.hidden, args.T)
     params = init_float_params(jax.random.PRNGKey(args.seed), net)
     qparams, _ = quantize_params(net, params)
+    policy = SchedPolicy(
+        class_weights=tuple(int(w) for w in args.class_weights.split(",")),
+        preempt=not args.no_preempt,
+    )
+    tiers = [
+        PrecisionTier.from_params(
+            net, params, w_bits=b, steps_fraction=args.degrade_steps_frac
+        )
+        for b in args.degrade_bits
+    ]
     engine = SNNServeEngine(
         net,
         qparams,
@@ -71,7 +116,24 @@ def main():
         backend=args.backend,
         sparse_admission_threshold=args.sparse_threshold,
         data_parallel=args.data_parallel,
+        scheduler=policy,
+        precision_tiers=tiers,
     )
+
+    if args.http is not None:
+        engine.warmup(args.T, compilation_cache_dir=args.compile_cache)
+
+        async def _serve_http():
+            server = SNNHttpServer(AsyncSNNServer(engine), port=args.http)
+            await server.start()
+            print(
+                f"serving on http://{server.host}:{server.port} "
+                "(POST /submit, POST /stream, GET /metrics, GET /healthz)"
+            )
+            await server.serve_forever()
+
+        asyncio.run(_serve_http())
+        return
 
     rng = np.random.default_rng(args.seed)
     if args.density is not None:
@@ -87,9 +149,31 @@ def main():
         if args.rate > 0
         else np.zeros(args.requests)
     )
+    mix = np.array(
+        [
+            args.critical_frac,
+            args.standard_frac,
+            max(0.0, 1.0 - args.critical_frac - args.standard_frac),
+        ]
+    )
+    classes = rng.choice(
+        [Priority.CRITICAL, Priority.STANDARD, Priority.BEST_EFFORT],
+        size=args.requests,
+        p=mix / mix.sum(),
+    )
     requests = [
-        SNNRequest(uid=i, raster=r, arrival_s=float(a))
-        for i, (r, a) in enumerate(zip(rasters, arrivals))
+        SNNRequest(
+            uid=i,
+            raster=r,
+            arrival_s=float(a),
+            priority=cls,
+            deadline_s=(
+                args.deadline_ms * 1e-3
+                if args.deadline_ms is not None and cls != Priority.BEST_EFFORT
+                else None
+            ),
+        )
+        for i, (r, a, cls) in enumerate(zip(rasters, arrivals, classes))
     ]
 
     # precompile the chunk programs + the event route so the report
@@ -114,7 +198,19 @@ def main():
         f"p99={np.percentile(lat, 99):.2f} ms"
     )
     print(f"  routes     : {routes}  (ticks={engine.n_ticks})")
-    for r in sorted(done, key=lambda r: r.uid)[:4]:
+    snap = engine.metrics.snapshot()
+    qos = {
+        k: snap["counters"].get(k, 0)
+        for k in ("completed", "degraded", "rejected", "preempted", "resumed")
+    }
+    print(f"  qos        : {qos}")
+    for cls, stats in snap["latency"].items():
+        if cls != "all":
+            print(
+                f"    {cls:<12}: p50={stats['p50_ms']:.2f} ms  "
+                f"p99={stats['p99_ms']:.2f} ms  (n={stats['window_count']})"
+            )
+    for r in sorted((r for r in done if r.status == "completed"), key=lambda r: r.uid)[:4]:
         dp = r.design
         print(
             f"  req{r.uid}: pred={r.prediction} route={r.route} "

@@ -1,0 +1,257 @@
+"""Minimal asyncio HTTP + streaming front-end over :class:`AsyncSNNServer`.
+
+Dependency-free by design (the container carries no web framework): a
+hand-rolled HTTP/1.1 request parser over ``asyncio.start_server``, one
+connection per request, ``Connection: close`` semantics throughout.  Four
+endpoints:
+
+``POST /submit``
+    Body: one JSON request object (see :func:`parse_request_json`).
+    Blocks until the request reaches a terminal state and answers with the
+    result JSON -- ``200`` for completed/degraded, ``429`` for a rejected
+    request (the deadline policy's early reject *is* back-pressure).
+``POST /stream``
+    Body: ``{"requests": [...]}``.  Streams one NDJSON result line per
+    request *as each completes* (completion order, not submit order) and
+    closes.  A client that disconnects mid-stream increments the
+    ``http_disconnects`` counter; the engine keeps serving -- submitted
+    work is never cancelled by a vanishing reader.
+``GET /metrics``
+    The engine's rolling metrics in Prometheus exposition format
+    (``repro.serve.metrics.ServeMetrics.prometheus_text``);
+    ``GET /metrics.json`` returns the raw ``snapshot()`` dict.
+``GET /healthz``
+    Liveness + queue/lane gauges as JSON.
+
+Malformed JSON or a bad raster answers ``400`` with the error message;
+anything else that escapes a handler answers ``500`` (and the serving loop
+survives -- fault-injection tests drive all three).
+
+The server binds ``host:port`` at :meth:`SNNHttpServer.start` (port 0
+picks a free port, reported back via ``server.port``) and is fully
+in-process: tests drive it over real sockets with ``asyncio.open_connection``.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+
+import numpy as np
+
+from repro.serve.scheduler import Priority
+from repro.serve.snn_engine import AsyncSNNServer, SNNRequest
+
+__all__ = ["SNNHttpServer", "parse_request_json", "result_json"]
+
+
+def parse_request_json(obj: dict, uid: int) -> SNNRequest:
+    """Build an :class:`SNNRequest` from one JSON request object.
+
+    Fields: ``raster`` (required, [T][n_in] ints), ``uid`` (default: server
+    assigned), ``priority`` (class name, case-insensitive, or int value),
+    ``tenant``, ``deadline_s``.
+    """
+    if not isinstance(obj, dict):
+        raise ValueError(f"request must be a JSON object, got {type(obj).__name__}")
+    if "raster" not in obj:
+        raise ValueError("request is missing 'raster'")
+    prio = obj.get("priority", Priority.STANDARD)
+    if isinstance(prio, str):
+        try:
+            prio = Priority[prio.upper().replace("-", "_")]
+        except KeyError:
+            raise ValueError(
+                f"unknown priority {obj['priority']!r}; expected one of "
+                f"{[p.name.lower() for p in Priority]}"
+            ) from None
+    deadline = obj.get("deadline_s")
+    return SNNRequest(
+        uid=int(obj.get("uid", uid)),
+        raster=np.asarray(obj["raster"], np.int32),
+        priority=Priority(prio),
+        tenant=str(obj.get("tenant", "default")),
+        deadline_s=None if deadline is None else float(deadline),
+    )
+
+
+def result_json(req: SNNRequest) -> dict:
+    """Terminal-state request -> the wire-format result object."""
+    return {
+        "uid": req.uid,
+        "status": req.status,
+        "prediction": req.prediction,
+        "spike_counts": None
+        if req.spike_counts is None
+        else np.asarray(req.spike_counts).tolist(),
+        "route": req.route,
+        "tier": req.tier,
+        "latency_s": req.latency_s,
+        "preemptions": req.preemptions,
+    }
+
+
+class SNNHttpServer:
+    """The HTTP front line: routes, parsing, and fault containment.
+
+    Wraps an :class:`AsyncSNNServer` (which wraps the engine); all QoS
+    behavior -- priorities, deadlines, preemption, degradation -- lives in
+    the engine's control plane, this class only translates HTTP.
+    """
+
+    def __init__(self, server: AsyncSNNServer, host: str = "127.0.0.1", port: int = 0):
+        self.server = server
+        self.host = host
+        self.port = port
+        self._srv: asyncio.base_events.Server | None = None
+        self._uid = itertools.count(1_000_000)  # server-assigned uids
+
+    @property
+    def metrics(self):
+        return self.server.engine.metrics
+
+    # -- lifecycle -----------------------------------------------------------
+    async def start(self) -> "SNNHttpServer":
+        self._srv = await asyncio.start_server(self._handle, self.host, self.port)
+        self.port = self._srv.sockets[0].getsockname()[1]
+        return self
+
+    async def stop(self) -> None:
+        if self._srv is not None:
+            self._srv.close()
+            await self._srv.wait_closed()
+            self._srv = None
+
+    async def serve_forever(self) -> None:
+        if self._srv is None:
+            await self.start()
+        async with self._srv:
+            await self._srv.serve_forever()
+
+    # -- one connection ------------------------------------------------------
+    async def _handle(
+        self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter
+    ) -> None:
+        try:
+            parsed = await self._read_request(reader)
+            if parsed is None:
+                return
+            method, path, body = parsed
+            if path == "/healthz" and method == "GET":
+                await self._respond_json(writer, 200, self._health())
+            elif path == "/metrics" and method == "GET":
+                await self._respond(
+                    writer, 200, self.metrics.prometheus_text().encode(),
+                    "text/plain; version=0.0.4",
+                )
+            elif path == "/metrics.json" and method == "GET":
+                await self._respond_json(writer, 200, self.metrics.snapshot())
+            elif path == "/submit" and method == "POST":
+                await self._submit(writer, body)
+            elif path == "/stream" and method == "POST":
+                await self._stream(writer, body)
+            else:
+                await self._respond_json(
+                    writer, 404, {"error": f"no route for {method} {path}"}
+                )
+        except (ValueError, json.JSONDecodeError) as e:
+            await self._respond_json(writer, 400, {"error": str(e)}, best_effort=True)
+        except (ConnectionError, asyncio.IncompleteReadError):
+            self.metrics.inc("http_disconnects")
+        except Exception as e:  # the front line must survive anything
+            await self._respond_json(
+                writer, 500, {"error": f"{type(e).__name__}: {e}"}, best_effort=True
+            )
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _read_request(self, reader):
+        line = await reader.readline()
+        if not line or not line.strip():
+            return None
+        parts = line.decode("latin1").split()
+        if len(parts) < 2:
+            raise ValueError(f"malformed request line: {line!r}")
+        method, path = parts[0].upper(), parts[1]
+        headers = {}
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = h.decode("latin1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        n = int(headers.get("content-length", 0) or 0)
+        body = await reader.readexactly(n) if n else b""
+        return method, path, body
+
+    # -- endpoint bodies -----------------------------------------------------
+    def _health(self) -> dict:
+        eng = self.server.engine
+        return {
+            "status": "ok" if self.server.error is None else "stalled",
+            "in_flight": eng.in_flight,
+            "active_lanes": eng.active_lanes,
+            "free_lanes": eng.free_lanes,
+            "queue_depth": len(eng.queue),
+            "served": eng.n_served,
+        }
+
+    async def _submit(self, writer, body: bytes) -> None:
+        req = parse_request_json(json.loads(body.decode()), next(self._uid))
+        done = await self.server.submit(req)
+        status = 429 if done.status == "rejected" else 200
+        await self._respond_json(writer, status, result_json(done))
+
+    async def _stream(self, writer, body: bytes) -> None:
+        obj = json.loads(body.decode())
+        items = obj.get("requests") if isinstance(obj, dict) else None
+        if not isinstance(items, list) or not items:
+            raise ValueError("body must be {\"requests\": [...]} with >= 1 entry")
+        reqs = [parse_request_json(o, next(self._uid)) for o in items]
+        futures = [self.server.submit(r) for r in reqs]
+        writer.write(
+            b"HTTP/1.1 200 OK\r\n"
+            b"Content-Type: application/x-ndjson\r\n"
+            b"Connection: close\r\n\r\n"
+        )
+        # results stream in completion order; a vanished reader stops the
+        # writes but never the work (futures resolve via the drive loop)
+        for fut in asyncio.as_completed(futures):
+            done = await fut
+            try:
+                writer.write((json.dumps(result_json(done)) + "\n").encode())
+                await writer.drain()
+            except (ConnectionError, OSError):
+                self.metrics.inc("http_disconnects")
+                break
+
+    # -- response plumbing ---------------------------------------------------
+    _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                429: "Too Many Requests", 500: "Internal Server Error"}
+
+    async def _respond(
+        self, writer, status: int, payload: bytes, ctype: str, best_effort: bool = False
+    ) -> None:
+        try:
+            writer.write(
+                f"HTTP/1.1 {status} {self._REASONS.get(status, '')}\r\n"
+                f"Content-Type: {ctype}\r\n"
+                f"Content-Length: {len(payload)}\r\n"
+                f"Connection: close\r\n\r\n".encode() + payload
+            )
+            await writer.drain()
+        except (ConnectionError, OSError):
+            if not best_effort:
+                raise  # the handler's outer catch counts the disconnect
+
+    async def _respond_json(
+        self, writer, status: int, obj: dict, best_effort: bool = False
+    ) -> None:
+        await self._respond(
+            writer, status, json.dumps(obj).encode(), "application/json", best_effort
+        )

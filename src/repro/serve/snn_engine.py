@@ -39,6 +39,29 @@ at a time through ``run_int``:
   purely a throughput knob for per-tick compute large enough to cover the
   extra dispatch.
 
+The **front-line control plane** (``repro.serve.scheduler`` +
+``repro.serve.metrics``) turns the lane pool into a QoS-aware service:
+
+* Requests carry a :class:`~repro.serve.scheduler.Priority` class, a
+  ``tenant``, and an optional ``deadline_s``; admission runs the
+  scheduler's class-credit deficit-round-robin over per-tenant
+  weighted-fair queues (prioritised but starvation-free).
+* A request whose deadline cannot survive the queue is **degraded** to a
+  coarser registered :class:`~repro.serve.scheduler.PrecisionTier` --
+  served immediately through one ragged ``run_int_batched`` express call
+  at the tier's re-quantized network (the paper's accuracy-vs-resource
+  dial, applied online) -- or **rejected** up front when no tier can make
+  the deadline either.
+* A queued ``CRITICAL`` request may **preempt** a running lower-priority
+  lane: the victim's carry state is snapshotted through the lane seams
+  (``lane_state_take``/``lane_state_put``), the request re-enters the
+  front of its class queue, and its eventual resume is bit-exact with an
+  uninterrupted serial ``run_int``.
+* ``engine.metrics`` is a rolling-window StatLogger (p50/p99 latency per
+  class, queue depth, lane occupancy, event-route hit rate, preemption /
+  degradation / rejection counters) that the HTTP front-end
+  (``repro.serve.http``) exposes at ``/metrics`` and ``/healthz``.
+
 ``SNNServeEngine.run`` replays an offered-load schedule (open loop:
 requests become visible at ``arrival_s`` offsets); ``submit``/``tick``
 expose the loop for callers that drive it themselves; and
@@ -55,8 +78,7 @@ import asyncio
 import dataclasses
 import functools
 import time
-from collections import deque
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,11 +93,36 @@ from repro.core.backend import (
     batched_lane_init,
     batched_lane_window,
     get_backend,
+    lane_state_put,
+    lane_state_take,
+    run_int_batched,
 )
 from repro.core.network import NetworkConfig, run_int
 from repro.distributed.compat import enable_compilation_cache
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy, Scheduler
 
-__all__ = ["SNNRequest", "SNNServeEngine", "AsyncSNNServer"]
+__all__ = [
+    "SNNRequest",
+    "SNNServeEngine",
+    "AsyncSNNServer",
+    "EngineStalledError",
+]
+
+
+class EngineStalledError(RuntimeError):
+    """``poll()``/``drain()`` made no progress for ``max_idle_ticks``
+    consecutive rounds while requests were still queued.
+
+    Carries the scheduler's queue snapshot and the lane table at the time
+    of the stall, so the spin is diagnosable instead of silent:
+    ``err.queue_snapshot`` / ``err.lane_states``.
+    """
+
+    def __init__(self, msg: str, queue_snapshot: dict, lane_states: list):
+        super().__init__(msg)
+        self.queue_snapshot = queue_snapshot
+        self.lane_states = lane_states
 
 
 @dataclasses.dataclass
@@ -85,18 +132,42 @@ class SNNRequest:
     ``raster`` is int [T, n_in] -- the sample's own window length T may
     differ per request.  ``arrival_s`` is the request's offset from the
     start of ``SNNServeEngine.run`` (offered-load replay); 0 means already
-    queued.  The engine fills the result fields on completion.
+    queued.
+
+    QoS fields: ``priority`` (a :class:`~repro.serve.scheduler.Priority`
+    class), ``tenant`` (weighted-fair sharing key within a class), and
+    ``deadline_s`` -- a latency SLO in seconds from arrival; when the
+    engine's service estimate says the deadline will be missed the request
+    is degraded to a registered precision tier or rejected instead of
+    queueing past it.  ``on_complete`` is invoked with the request at any
+    terminal state (completed / degraded / rejected); a raising callback is
+    counted (``callback_failures``) and never takes the engine down.
+
+    The engine fills the result fields at the terminal state: ``status`` is
+    ``"completed"`` | ``"degraded"`` | ``"rejected"``, ``tier`` names the
+    precision served (``"full"`` or a registered tier name), and
+    ``preemptions`` / ``admitted_seq`` record scheduling history.
     """
 
     uid: int
     raster: np.ndarray
     arrival_s: float = 0.0
-    # -- filled by the engine on completion ---------------------------------
+    priority: Priority | int = Priority.STANDARD
+    tenant: str = "default"
+    deadline_s: float | None = None
+    on_complete: "Callable[[SNNRequest], None] | None" = dataclasses.field(
+        default=None, repr=False
+    )
+    # -- filled by the engine at the terminal state --------------------------
     spike_counts: np.ndarray | None = None  # [n_classes] output spike totals
     prediction: int | None = None
-    route: str | None = None  # "lanes" | "event-csr" | "event-gather" | "event-pallas"
-    latency_s: float | None = None  # completion - arrival (queueing included)
-    service_s: float | None = None  # completion - admission
+    route: str | None = None  # "lanes" | "event-*" | "degraded"
+    latency_s: float | None = None  # terminal - arrival (queueing included)
+    service_s: float | None = None  # terminal - admission
+    status: str | None = None  # "completed" | "degraded" | "rejected"
+    tier: str | None = None  # "full" | registered tier name (None if rejected)
+    preemptions: int = 0
+    admitted_seq: int | None = None  # first-admission order (FIFO property)
     _arrival_wall: float | None = dataclasses.field(default=None, repr=False)
     _net: "NetworkConfig | None" = dataclasses.field(default=None, repr=False)
     _stats_src: tuple | None = dataclasses.field(default=None, repr=False)
@@ -104,8 +175,14 @@ class SNNRequest:
     _design: hw_model.DesignPoint | None = dataclasses.field(default=None, repr=False)
     _max_val: int = dataclasses.field(default=0, repr=False)
     _max_step_events: int = dataclasses.field(default=0, repr=False)
+    _sched_seq: int | None = dataclasses.field(default=None, repr=False)
+    _suspended: tuple | None = dataclasses.field(default=None, repr=False)
+    _finalized: bool = dataclasses.field(default=False, repr=False)
 
     def __post_init__(self):
+        self.priority = Priority(self.priority)  # raises on unknown classes
+        if self.deadline_s is not None:
+            self.deadline_s = float(self.deadline_s)
         self.raster = np.asarray(self.raster)
         if self.raster.ndim != 2:
             raise ValueError(
@@ -144,23 +221,40 @@ class SNNRequest:
         return self.spike_counts is not None
 
     @property
+    def finished(self) -> bool:
+        """Terminal: completed, degraded, or rejected (exactly once)."""
+        return self.status is not None
+
+    @property
     def event_stats(self) -> dict | None:
         """This request's measured event traffic, ``SimRecord.event_stats``
         shaped: ``{"input_events_per_step": [T], "layer_events_per_step":
         [[T], ...]}``.  Assembled lazily (off the serving hot path) from
         whatever the engine recorded -- the per-tick emitted counts of the
-        lane route, or the single-sample ``SimRecord`` of the event route.
+        lane route, the single-sample ``SimRecord`` of the event route, or
+        this sample's slice of a degraded express batch.
         """
         if self._stats is None and self._stats_src is not None:
             kind, payload = self._stats_src
             if kind == "record":
                 self._stats = payload.event_stats()
+            elif kind == "batch":  # (SimRecord, sample index, true window)
+                rec, b, Tb = payload
+                self._stats = {
+                    "input_events_per_step": np.asarray(rec.input_events)[
+                        :Tb, b
+                    ].astype(np.float64),
+                    "layer_events_per_step": [
+                        np.asarray(s)[:Tb, b].astype(np.float64)
+                        for s in rec.layer_spikes
+                    ],
+                }
             else:  # per-lane chunks: list of [k_i, n_layers] emitted counts
                 per_step = np.concatenate(payload, axis=0).astype(np.float64)
                 self._stats = {
                     "input_events_per_step": np.count_nonzero(
                         self.raster, axis=-1
-                    ).astype(np.float64),
+                    ).astype(np.float64)[: per_step.shape[0]],
                     "layer_events_per_step": [
                         per_step[:, l] for l in range(per_step.shape[1])
                     ],
@@ -173,7 +267,9 @@ class SNNRequest:
 
         Derived lazily from ``event_stats`` (off the serving hot path):
         latency/power/energy from ``hw_model.design_point``, exactly what a
-        batch run's ``SimRecord.event_stats()`` would feed it.
+        batch run's ``SimRecord.event_stats()`` would feed it.  A degraded
+        request's point is modeled at its *tier's* network -- the coarser
+        deployment the paper's explorer would have picked.
         """
         if self._design is None and self._net is not None and self.event_stats is not None:
             self._design = hw_model.design_point(
@@ -276,6 +372,21 @@ class SNNServeEngine:
     compile.  ``tick_stride=1`` recovers strict per-step ticking;
     ``tick_stride=None`` leaves the chunk uncapped.
 
+    ``scheduler`` (a :class:`~repro.serve.scheduler.SchedPolicy` or a
+    prebuilt :class:`~repro.serve.scheduler.Scheduler`) configures the
+    front-line control plane: class-credit priority admission, per-tenant
+    weighted fairness, preemption, and deadline verdicts.  The default
+    policy with default-class requests degenerates to the plain FIFO the
+    engine always had.  ``precision_tiers`` registers the coarser
+    deployments that deadline degradation may serve (ordered finest ->
+    coarsest; the first tier that makes the deadline wins).
+
+    ``max_idle_ticks`` is the liveness guard: if ``poll()`` completes
+    nothing, admits nothing, and has no active lanes for that many
+    consecutive rounds while requests are still queued, it raises
+    :class:`EngineStalledError` carrying the queue snapshot and lane table
+    instead of spinning forever (``None`` disables the guard).
+
     ``report_design_point=False`` skips attaching per-request event stats
     (and therefore the lazily derived ``req.design`` hardware operating
     point) for pure-throughput deployments.
@@ -303,6 +414,10 @@ class SNNServeEngine:
         tick_stride: int | None = 32,
         report_design_point: bool = True,
         data_parallel: int | None = None,
+        scheduler: "SchedPolicy | Scheduler | None" = None,
+        precision_tiers: Sequence[PrecisionTier] = (),
+        max_idle_ticks: int | None = 1000,
+        metrics_window_s: float = 60.0,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -315,6 +430,10 @@ class SNNServeEngine:
                 "sparse_admission_threshold must be in [0, 1], got "
                 f"{sparse_admission_threshold}"
             )
+        if max_idle_ticks is not None and max_idle_ticks < 1:
+            raise ValueError(
+                f"max_idle_ticks must be >= 1 or None, got {max_idle_ticks}"
+            )
         self.net = net
         self.qparams = list(qparams)
         self.max_batch = max_batch
@@ -324,6 +443,17 @@ class SNNServeEngine:
         self.sparse_admission_threshold = sparse_admission_threshold
         self.tick_stride = tick_stride
         self.report_design_point = report_design_point
+        self.sched = scheduler if isinstance(scheduler, Scheduler) else Scheduler(scheduler)
+        for tier in precision_tiers:
+            if tier.net.n_in != net.n_in or tier.net.n_classes != net.n_classes:
+                raise ValueError(
+                    f"precision tier {tier.name!r} does not match the serving "
+                    f"network topology ({tier.net.n_in}ch/{tier.net.n_classes}cls "
+                    f"vs {net.n_in}ch/{net.n_classes}cls)"
+                )
+        self.tiers: tuple[PrecisionTier, ...] = tuple(precision_tiers)
+        self.max_idle_ticks = max_idle_ticks
+        self.metrics = ServeMetrics(metrics_window_s)
 
         self._dmesh = None
         if data_parallel is not None and data_parallel > 1:
@@ -346,10 +476,11 @@ class SNNServeEngine:
 
         self._states = batched_lane_init(net, max_batch)
         self._lanes: list[_Lane | None] = [None] * max_batch
-        self.queue: deque[SNNRequest] = deque()
         self.n_ticks = 0  # jitted chunk dispatches
         self.n_steps_run = 0  # simulated time steps advanced (sum of chunk lengths)
         self.n_served = 0
+        self._admit_seq = 0  # first-admission counter (FIFO-order evidence)
+        self._idle_rounds = 0  # consecutive no-progress polls (liveness guard)
         # Largest layer-0 input spike value for which the f32 BLAS
         # feed-forward path stays exact (see _ff_currents_f32_exact); deeper
         # layers always integrate {0,1} phase-B spikes, so they only need
@@ -377,6 +508,12 @@ class SNNServeEngine:
 
     # -- introspection ------------------------------------------------------
     @property
+    def queue(self):
+        """The scheduler, quacking like the FIFO deque it replaced
+        (``len`` / truthiness / indexing / scheduling-order iteration)."""
+        return self.sched
+
+    @property
     def active_lanes(self) -> int:
         return sum(l is not None for l in self._lanes)
 
@@ -386,7 +523,7 @@ class SNNServeEngine:
 
     @property
     def in_flight(self) -> bool:
-        return bool(self.queue) or self.active_lanes > 0
+        return bool(self.sched) or self.active_lanes > 0
 
     # -- admission ----------------------------------------------------------
     def submit(self, req: SNNRequest) -> None:
@@ -398,7 +535,8 @@ class SNNServeEngine:
             )
         if req._arrival_wall is None:
             req._arrival_wall = time.perf_counter()
-        self.queue.append(req)
+        self.metrics.inc("submitted")
+        self.sched.add(req)
 
     def _routes_to_event(self, req: SNNRequest) -> bool:
         """Direct (out-of-jit) sparse route: eager csr/gather strategies only."""
@@ -422,6 +560,7 @@ class SNNServeEngine:
 
     def _serve_event(self, req: SNNRequest) -> SNNRequest:
         """Direct sparse route: one single-sample event-backend run."""
+        t0 = time.perf_counter()
         rec = run_int(
             self.net,
             self.qparams,
@@ -430,6 +569,7 @@ class SNNServeEngine:
         )
         req.spike_counts = np.asarray(rec.spike_counts)[0]
         req.route = f"event-{self.event_backend.resolved_strategy()}"
+        self.metrics.direct_s += time.perf_counter() - t0
         self._finish(req, time.perf_counter(), stats_src=("record", rec))
         return req
 
@@ -439,35 +579,188 @@ class SNNServeEngine:
                 return i
         return None
 
+    # -- the control plane: one dispatch round ------------------------------
     def _dispatch(self, now: float) -> list[SNNRequest]:
-        """Drain the queue: direct event serves + lane admissions.
+        """One scheduling round over the queue, in QoS order:
 
-        Lane-bound requests admit in FIFO order; event-routable requests
-        are served wherever they sit in the queue -- their direct route
-        needs no lane, so a full lane pool must never head-of-line block
-        them behind a dense request.
+        1. **direct sparse serves** -- event-routable requests are served
+           wherever they sit (their route needs no lane, so a full pool
+           must never head-of-line block them behind a dense request);
+        2. **deadline sweep** -- every queued deadlined request gets a
+           keep / degrade / reject verdict against the engine's measured
+           service estimate; degraded requests are served *now* through
+           the tier express batch, rejects terminate immediately;
+        3. **preemption** -- queued CRITICALs may evict running
+           lower-priority lanes (longest remaining window first) when the
+           pool is full;
+        4. **admission** -- free lanes fill by class-credit DRR + tenant
+           WFQ (strict FIFO under the default policy).
         """
-        done = []
-        waiting: deque[SNNRequest] = deque()
-        while self.queue:
-            req = self.queue.popleft()
-            if self._routes_to_event(req):
+        t0 = time.perf_counter()
+        served_s = 0.0  # compute spent serving, excluded from dispatch_s
+        done: list[SNNRequest] = []
+
+        if self.event_backend is not None and self._event_budget is None and self.sched:
+            for req in [r for r in self.sched if self._routes_to_event(r)]:
+                self.sched.remove(req)
+                s0 = time.perf_counter()
                 done.append(self._serve_event(req))
-                continue
-            slot = self._free_lane() if not waiting else None
+                served_s += time.perf_counter() - s0
+
+        degrade: list[tuple[SNNRequest, PrecisionTier]] = []
+        if self.sched:
+            deadlined = [r for r in self.sched if r.deadline_s is not None]
+            if deadlined:
+                step_s = self.metrics.est_step_s
+                lane_backlog = sum(
+                    l.req.n_steps - l.t for l in self._lanes if l is not None
+                )
+                queue_backlog = sum(r.n_steps for r in self.sched)
+                for req in deadlined:
+                    if step_s is None:
+                        wait = 0.0
+                    elif (
+                        Priority(req.priority) is Priority.CRITICAL
+                        and self.sched.policy.preempt
+                    ):
+                        wait = 0.0  # it would preempt its way in
+                    else:
+                        wait = (
+                            (lane_backlog + queue_backlog - req.n_steps)
+                            * step_s
+                            / self.max_batch
+                        )
+                    action, tier = self.sched.deadline_action(
+                        req, now, est_step_s=step_s, est_wait_s=wait, tiers=self.tiers
+                    )
+                    if action == "degrade":
+                        self.sched.remove(req)
+                        degrade.append((req, tier))
+                    elif action == "reject":
+                        self.sched.remove(req)
+                        done.append(self._reject(req, now))
+        if degrade:
+            s0 = time.perf_counter()
+            done.extend(self._serve_degraded(degrade, now))
+            dt = time.perf_counter() - s0
+            served_s += dt
+            self.metrics.degrade_s += dt
+
+        pol = self.sched.policy
+        while (
+            pol.preempt
+            and self.sched.has_class(Priority.CRITICAL)
+            and self._free_lane() is None
+        ):
+            victim = self._pick_victim()
+            if victim is None:
+                break
+            req = self.sched.pop_class(Priority.CRITICAL)
+            if req is None:
+                break
+            self._preempt(victim)
+            self._admit(req, victim, now)
+
+        while self.sched:
+            slot = self._free_lane()
             if slot is None:
-                waiting.append(req)  # lanes full: keep FIFO among lane-bound
-                if self.event_backend is None or self._event_budget is not None:
-                    break  # no direct route exists; stop scanning
+                break
+            req = self.sched.pop()
+            if req is None:
+                break  # queue non-empty but nothing admissible: idle round
+            self._admit(req, slot, now)
+
+        self.metrics.dispatch_s += time.perf_counter() - t0 - served_s
+        return done
+
+    def _admit(self, req: SNNRequest, slot: int, now: float) -> None:
+        """Place a request on a free lane -- restoring its snapshotted carry
+        if it was preempted (the resume is then bit-exact with an
+        uninterrupted run), otherwise starting a fresh lane."""
+        if req._suspended is not None:
+            lane, carry = req._suspended
+            req._suspended = None
+            self._states = lane_state_put(self._states, slot, carry)
+            self._lanes[slot] = lane
+            self.metrics.inc("resumed")
+            return
+        if req.admitted_seq is None:
+            req.admitted_seq = self._admit_seq
+            self._admit_seq += 1
+        req.route = "event-pallas" if self._sparse_lane_eligible(req) else "lanes"
+        self._lanes[slot] = _Lane(
+            req=req,
+            admitted_wall=now,
+            counts=np.zeros(self.net.n_classes, np.int64),
+        )
+
+    def _pick_victim(self) -> int | None:
+        """Preemption victim: the non-critical lane with the most window
+        left (evicting near-finished work wastes the most sunk compute),
+        respecting the policy's per-request eviction cap."""
+        pol = self.sched.policy
+        best, best_rem = None, -1
+        for i, lane in enumerate(self._lanes):
+            if lane is None:
                 continue
-            req.route = "event-pallas" if self._sparse_lane_eligible(req) else "lanes"
-            self._lanes[slot] = _Lane(
-                req=req,
-                admitted_wall=now,
-                counts=np.zeros(self.net.n_classes, np.int64),
-            )
-        waiting.extend(self.queue)
-        self.queue = waiting
+            r = lane.req
+            if Priority(r.priority) is Priority.CRITICAL:
+                continue
+            rem = r.n_steps - lane.t
+            if rem < pol.preempt_min_remaining_steps or r.preemptions >= pol.max_preemptions:
+                continue
+            if rem > best_rem:
+                best, best_rem = i, rem
+        return best
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a running lane: snapshot its carry through the lane seams
+        and re-enqueue the request at the front of its class queue."""
+        lane = self._lanes[slot]
+        self._lanes[slot] = None
+        req = lane.req
+        req.preemptions += 1
+        req._suspended = (lane, lane_state_take(self._states, slot))
+        self.sched.requeue_front(req)
+        self.metrics.inc("preempted")
+
+    def _serve_degraded(
+        self, batch: list[tuple[SNNRequest, PrecisionTier]], now: float
+    ) -> list[SNNRequest]:
+        """Express service for deadline-degraded requests: group by tier
+        and run each group through one immediate ragged ``run_int_batched``
+        at the tier's re-quantized (net, qparams), skipping the lane queue
+        entirely.  Batch and window pad to powers of two (per-sample
+        lengths masking keeps each sample bit-exact with a serial
+        ``run_int`` at the same tier), so only a handful of express
+        programs ever compile."""
+        done: list[SNNRequest] = []
+        groups: dict[str, tuple[PrecisionTier, list[SNNRequest]]] = {}
+        for req, tier in batch:
+            groups.setdefault(tier.name, (tier, []))[1].append(req)
+        cap = 1 << max(0, (self.max_batch - 1)).bit_length()
+        for tier, reqs in groups.values():
+            for lo in range(0, len(reqs), cap):
+                chunk = reqs[lo : lo + cap]
+                steps = [tier.steps(r.n_steps) for r in chunk]
+                T_pad = 1 << max(0, (max(steps) - 1)).bit_length()
+                B_pad = min(cap, 1 << max(0, (len(chunk) - 1)).bit_length())
+                x = np.zeros((T_pad, B_pad, self.net.n_in), np.int32)
+                lengths = np.zeros((B_pad,), np.int32)
+                for b, (r, Tb) in enumerate(zip(chunk, steps)):
+                    x[:Tb, b] = r.raster[:Tb]
+                    lengths[b] = Tb
+                rec = run_int_batched(tier.net, tier.qparams, x, lengths)
+                counts = np.asarray(rec.spike_counts)
+                end = time.perf_counter()
+                for b, (r, Tb) in enumerate(zip(chunk, steps)):
+                    r.spike_counts = counts[b]
+                    r.status = "degraded"
+                    r.tier = tier.name
+                    r.route = "degraded"
+                    r.service_s = end - now
+                    self._finish(r, end, stats_src=("batch", (rec, b, Tb)), net=tier.net)
+                    done.append(r)
         return done
 
     # -- the tick loop ------------------------------------------------------
@@ -537,15 +830,20 @@ class SNNServeEngine:
                 and all(self._lanes[i].req._max_val <= self._f32_input_max for i in active)
                 else "int32"
             )
+        t0 = time.perf_counter()
         self._states, packed = _lane_window_packed(
             self.net, self.qparams, self._states, x, meta, ff_mode, self._dmesh, budget
         )
         packed = np.asarray(packed)  # [k, n_lanes, n_classes + n_layers]
+        tick_wall = time.perf_counter() - t0
         n_classes = self.net.n_classes
         self.n_ticks += 1
         self.n_steps_run += k
         finished = []
         now = time.perf_counter()
+        self.metrics.record_tick(
+            k, tick_wall, len(self.sched), len(active), self.max_batch, now
+        )
         for i in active:
             lane = self._lanes[i]
             valid = int(meta[1, i])
@@ -565,7 +863,16 @@ class SNNServeEngine:
         self._finish(req, now, stats_src=("chunks", lane.layer_events))
         return req
 
-    def _finish(self, req: SNNRequest, now: float, stats_src: tuple) -> None:
+    def _finish(
+        self, req: SNNRequest, now: float, stats_src: tuple, net=None
+    ) -> None:
+        if req._finalized:
+            raise RuntimeError(f"request {req.uid} reached a terminal state twice")
+        req._finalized = True
+        req._suspended = None
+        if req.status is None:
+            req.status = "completed"
+            req.tier = "full"
         req.prediction = int(np.argmax(req.spike_counts))
         if req._arrival_wall is not None:
             req.latency_s = now - req._arrival_wall
@@ -574,8 +881,32 @@ class SNNServeEngine:
         if self.report_design_point:
             # req.event_stats / req.design assemble lazily from these
             req._stats_src = stats_src
-            req._net = self.net
+            req._net = net if net is not None else self.net
         self.n_served += 1
+        self.metrics.record_finish(req, now)
+        self._finalize(req)
+
+    def _reject(self, req: SNNRequest, now: float) -> SNNRequest:
+        """Terminal reject: the client learns now, not after a doomed wait."""
+        if req._finalized:
+            raise RuntimeError(f"request {req.uid} reached a terminal state twice")
+        req._finalized = True
+        req._suspended = None
+        req.status = "rejected"
+        if req._arrival_wall is not None:
+            req.latency_s = now - req._arrival_wall
+        self.metrics.record_reject(req, now)
+        self._finalize(req)
+        return req
+
+    def _finalize(self, req: SNNRequest) -> None:
+        """Invoke the completion callback; a raising callback is counted
+        and contained -- it must never take the serving loop down."""
+        if req.on_complete is not None:
+            try:
+                req.on_complete(req)
+            except Exception:
+                self.metrics.inc("callback_failures")
 
     def warmup(
         self,
@@ -592,7 +923,9 @@ class SNNServeEngine:
         gather) direct route gets a zero-raster single-sample run, and the
         jitted pallas route gets the sparse lane program precompiled *at
         each power-of-two chunk*, so the first sparse admission never pays
-        compile latency mid-traffic.  Call once before measuring or serving
+        compile latency mid-traffic.  Registered precision tiers get their
+        express (degraded-serve) programs compiled at every power-of-two
+        batch width up to the pool.  Call once before measuring or serving
         latency-sensitive traffic; without it the first cohorts pay jit
         compilation inside their reported latency.
 
@@ -605,6 +938,9 @@ class SNNServeEngine:
         cache before compiling, so an engine restarted with the same
         network skips these compiles entirely on the next process
         (``repro.distributed.compat.enable_compilation_cache``).
+
+        Warmup traffic leaves no trace: ``n_served`` and the metrics layer
+        are reset on the way out.
         """
         if self.in_flight:
             raise RuntimeError("warmup() requires an idle engine")
@@ -643,13 +979,52 @@ class SNNServeEngine:
         if self.event_backend is not None and self._event_budget is None:
             req = SNNRequest(uid=-1, raster=np.zeros((T, self.net.n_in), np.uint8))
             self._serve_event(req)
-            self.n_served -= 1
+        for tier in self.tiers:
+            T_pad = 1 << max(0, (tier.steps(T) - 1)).bit_length()
+            full = 1 << max(0, (self.max_batch - 1)).bit_length()
+            for B_pad in [1 << i for i in range(full.bit_length())]:
+                np.asarray(
+                    run_int_batched(
+                        tier.net,
+                        tier.qparams,
+                        np.zeros((T_pad, B_pad, self.net.n_in), np.int32),
+                        np.zeros((B_pad,), np.int32),
+                    ).spike_counts
+                )
+        self.n_served = 0
+        self.metrics = ServeMetrics(self.metrics.window_s)
 
     # -- serve loops --------------------------------------------------------
     def poll(self) -> list[SNNRequest]:
-        """One service round: admissions/direct serves, then one tick."""
+        """One service round: a dispatch round, then one tick.
+
+        The liveness guard lives here: a round that completes nothing,
+        admits nothing, and runs no lanes while requests still queue is an
+        *idle* round, and ``max_idle_ticks`` consecutive idle rounds raise
+        :class:`EngineStalledError` with the queue snapshot and lane table
+        (instead of ``drain()`` spinning forever on a wedged scheduler).
+        """
         done = self._dispatch(time.perf_counter())
         done.extend(self.tick())
+        if done or self.active_lanes > 0 or not self.sched:
+            self._idle_rounds = 0
+        else:
+            self._idle_rounds += 1
+            if self.max_idle_ticks is not None and self._idle_rounds >= self.max_idle_ticks:
+                snap = self.sched.snapshot()
+                lanes = [
+                    None
+                    if lane is None
+                    else {"uid": lane.req.uid, "t": lane.t, "n_steps": lane.req.n_steps}
+                    for lane in self._lanes
+                ]
+                raise EngineStalledError(
+                    f"no progress for {self._idle_rounds} consecutive rounds "
+                    f"with {len(self.sched)} queued request(s) and no active "
+                    f"lanes; queue snapshot: {snap}; lanes: {lanes}",
+                    snap,
+                    lanes,
+                )
         return done
 
     def drain(self) -> list[SNNRequest]:
@@ -681,8 +1056,7 @@ class SNNServeEngine:
                 self.submit(pending[i])
                 i += 1
             if self.in_flight:
-                done.extend(self._dispatch(now))
-                done.extend(self.tick())
+                done.extend(self.poll())
             elif i < len(pending):
                 time.sleep(max(0.0, pending[i]._arrival_wall - now))
         return done
@@ -691,22 +1065,33 @@ class SNNServeEngine:
 class AsyncSNNServer:
     """asyncio facade over :class:`SNNServeEngine`.
 
-    ``submit`` returns a future resolved with the completed request; a
-    single background task drives the engine's poll loop while anything is
-    in flight (yielding to the event loop between ticks) and exits when the
-    engine goes idle.
+    ``submit`` returns a future resolved with the request at *any* terminal
+    state -- completed, degraded, or rejected (distinguish via
+    ``req.status``); a single background task drives the engine's poll loop
+    while anything is in flight (yielding to the event loop between ticks)
+    and exits when the engine goes idle.  A cancelled future never wedges
+    the drive loop (its request still serves; the resolution is simply
+    dropped), and if the engine raises mid-drive (e.g.
+    :class:`EngineStalledError`) every pending future receives the
+    exception instead of hanging forever -- the error is also kept on
+    ``server.error``.
     """
 
     def __init__(self, engine: SNNServeEngine):
         self.engine = engine
         self._futures: dict[int, asyncio.Future] = {}
         self._task: asyncio.Task | None = None
+        self.error: BaseException | None = None
 
     def submit(self, req: SNNRequest) -> "asyncio.Future[SNNRequest]":
         loop = asyncio.get_running_loop()
         fut: asyncio.Future = loop.create_future()
         self._futures[id(req)] = fut
-        self.engine.submit(req)
+        try:
+            self.engine.submit(req)
+        except Exception:
+            self._futures.pop(id(req), None)
+            raise
         if self._task is None or self._task.done():
             self._task = loop.create_task(self._drive())
         return fut
@@ -715,9 +1100,17 @@ class AsyncSNNServer:
         return list(await asyncio.gather(*[self.submit(r) for r in requests]))
 
     async def _drive(self) -> None:
-        while self.engine.in_flight:
-            for req in self.engine.poll():
-                fut = self._futures.pop(id(req), None)
-                if fut is not None and not fut.done():
-                    fut.set_result(req)
-            await asyncio.sleep(0)
+        try:
+            while self.engine.in_flight:
+                for req in self.engine.poll():
+                    fut = self._futures.pop(id(req), None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(req)
+                await asyncio.sleep(0)
+        except Exception as e:
+            # deliver the failure to every waiter rather than hanging them
+            self.error = e
+            pending, self._futures = self._futures, {}
+            for fut in pending.values():
+                if not fut.done():
+                    fut.set_exception(e)

@@ -1,0 +1,263 @@
+"""Fault injection for ``AsyncSNNServer`` + the HTTP/stream front-end.
+
+The front line must contain every client-side failure mode: a vanishing
+stream reader, a cancelled future, a raising completion callback, and
+malformed requests all leave the engine serving -- lanes freed, counters
+incremented, no deadlock.  A wedged engine must *fail loudly*: every
+pending future receives the stall exception instead of hanging, and
+``/healthz`` flips to "stalled".
+
+All tests drive the real server over real sockets (``asyncio.start_server``
+/ ``asyncio.open_connection``) inside ``asyncio.run`` -- no HTTP client
+dependency, matching the dependency-free server.
+"""
+
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel, ResetMode, Topology
+from repro.serve.http import SNNHttpServer, parse_request_json
+from repro.serve.scheduler import Priority, Scheduler
+from repro.serve.snn_engine import (
+    AsyncSNNServer,
+    EngineStalledError,
+    SNNRequest,
+    SNNServeEngine,
+)
+
+NET = NetworkConfig(
+    layers=(
+        LayerConfig(n_in=16, n_out=10, neuron=NeuronModel.LIF, topology=Topology.FF,
+                    reset=ResetMode.SUBTRACT, beta=0.9),
+        LayerConfig(n_in=10, n_out=4, neuron=NeuronModel.LIF,
+                    reset=ResetMode.ZERO, beta=0.77),
+    ),
+    n_steps=8,
+)
+_params = init_float_params(jax.random.PRNGKey(0), NET)
+QPARAMS, _ = quantize_params(NET, _params)
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 2)
+    return SNNServeEngine(NET, QPARAMS, **kw)
+
+
+def _raster(T=8, seed=0, rate=0.4):
+    rng = np.random.default_rng(seed)
+    return (rng.random((T, NET.n_in)) < rate).astype(np.int32)
+
+
+async def _http(port, method, path, body=None, read_all=True):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = b"" if body is None else json.dumps(body).encode()
+    writer.write(
+        f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+        f"Content-Length: {len(payload)}\r\n\r\n".encode() + payload
+    )
+    await writer.drain()
+    if not read_all:
+        return reader, writer
+    data = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    head, _, rest = data.partition(b"\r\n\r\n")
+    return int(head.split()[1]), rest
+
+
+def test_submit_roundtrip_and_reject_statuses():
+    async def main():
+        srv = await SNNHttpServer(AsyncSNNServer(_engine())).start()
+        status, body = await _http(
+            srv.port, "POST", "/submit",
+            {"raster": _raster().tolist(), "priority": "critical", "uid": 7},
+        )
+        out = json.loads(body)
+        assert status == 200
+        assert out["uid"] == 7 and out["status"] == "completed"
+        assert out["tier"] == "full" and len(out["spike_counts"]) == 4
+        # an unmeetable deadline rejects -> HTTP 429 (early back-pressure)
+        status, body = await _http(
+            srv.port, "POST", "/submit",
+            {"raster": _raster().tolist(), "deadline_s": 1e-9},
+        )
+        assert status == 429 and json.loads(body)["status"] == "rejected"
+        status, body = await _http(srv.port, "GET", "/healthz")
+        health = json.loads(body)
+        assert status == 200 and health["status"] == "ok"
+        assert health["free_lanes"] == 2 and not health["in_flight"]
+        status, body = await _http(srv.port, "GET", "/metrics")
+        assert status == 200
+        assert 'neura_requests_total{outcome="completed"} 1' in body.decode()
+        assert 'neura_requests_total{outcome="rejected"} 1' in body.decode()
+        status, body = await _http(srv.port, "GET", "/metrics.json")
+        assert status == 200 and json.loads(body)["counters"]["submitted"] == 2
+        await srv.stop()
+
+    asyncio.run(main())
+
+
+def test_stream_serves_all_as_ndjson():
+    async def main():
+        srv = await SNNHttpServer(AsyncSNNServer(_engine())).start()
+        n = 5
+        status, body = await _http(
+            srv.port, "POST", "/stream",
+            {"requests": [{"raster": _raster(seed=i).tolist(), "uid": i}
+                          for i in range(n)]},
+        )
+        assert status == 200
+        lines = [json.loads(l) for l in body.splitlines()]
+        assert sorted(r["uid"] for r in lines) == list(range(n))
+        assert all(r["status"] == "completed" for r in lines)
+        await srv.stop()
+
+    asyncio.run(main())
+
+
+def test_client_disconnect_mid_stream_frees_lanes_and_keeps_serving():
+    async def main():
+        engine = _engine(tick_stride=1)  # strict per-step ticks: a slow stream
+        server = AsyncSNNServer(engine)
+        srv = await SNNHttpServer(server).start()
+        reader, writer = await _http(
+            srv.port, "POST", "/stream",
+            {"requests": [{"raster": _raster(T=8, seed=i).tolist(), "uid": i}
+                          for i in range(6)]},
+            read_all=False,
+        )
+        await reader.readline()  # status line arrives: the stream is live
+        writer.close()  # client vanishes mid-stream
+        await writer.wait_closed()
+        # the engine must keep serving the submitted work to completion
+        for _ in range(2000):
+            if not engine.in_flight:
+                break
+            await asyncio.sleep(0.005)
+        assert not engine.in_flight
+        assert engine.free_lanes == engine.max_batch
+        assert engine.n_served == 6
+        assert engine.metrics.counters["http_disconnects"] >= 1
+        # and the front line still answers
+        status, body = await _http(srv.port, "GET", "/healthz")
+        assert status == 200 and json.loads(body)["served"] == 6
+        await srv.stop()
+
+    asyncio.run(main())
+
+
+def test_future_cancellation_leaves_engine_clean():
+    async def main():
+        engine = _engine(tick_stride=1)
+        server = AsyncSNNServer(engine)
+        reqs = [SNNRequest(uid=i, raster=_raster(seed=i)) for i in range(3)]
+        futs = [server.submit(r) for r in reqs]
+        futs[1].cancel()
+        done = await asyncio.gather(*[futs[0], futs[2]])
+        assert [r.uid for r in done] == [0, 2]
+        with pytest.raises(asyncio.CancelledError):
+            futs[1].result()
+        # the cancelled request still served (work is never torn out of the
+        # engine mid-lane); only its resolution was dropped
+        for _ in range(2000):
+            if not engine.in_flight:
+                break
+            await asyncio.sleep(0.005)
+        assert reqs[1].status == "completed"
+        assert engine.free_lanes == engine.max_batch
+        assert not server._futures  # no leaked future entries
+
+    asyncio.run(main())
+
+
+def test_raising_callback_never_breaks_the_drive_loop():
+    async def main():
+        engine = _engine()
+        server = AsyncSNNServer(engine)
+
+        def boom(req):
+            raise RuntimeError("client callback bug")
+
+        reqs = [SNNRequest(uid=i, raster=_raster(seed=i), on_complete=boom)
+                for i in range(4)]
+        done = await server.serve(reqs)
+        assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+        assert all(r.status == "completed" for r in done)
+        assert engine.metrics.counters["callback_failures"] == 4
+        assert engine.free_lanes == engine.max_batch
+
+    asyncio.run(main())
+
+
+def test_engine_stall_fails_pending_futures_and_flips_healthz():
+    async def main():
+        engine = _engine(max_batch=1, max_idle_ticks=3)
+
+        class Wedged(Scheduler):
+            def pop(self):
+                return None
+
+        engine.sched = Wedged()
+        server = AsyncSNNServer(engine)
+        srv = await SNNHttpServer(server).start()
+        fut = server.submit(SNNRequest(uid=0, raster=_raster()))
+        with pytest.raises(EngineStalledError) as exc:
+            await fut
+        assert exc.value.queue_snapshot["depth"] == 1
+        assert isinstance(server.error, EngineStalledError)
+        status, body = await _http(srv.port, "GET", "/healthz")
+        assert status == 200 and json.loads(body)["status"] == "stalled"
+        await srv.stop()
+
+    asyncio.run(main())
+
+
+def test_malformed_requests_answer_4xx_and_server_survives():
+    async def main():
+        srv = await SNNHttpServer(AsyncSNNServer(_engine())).start()
+        status, body = await _http(srv.port, "POST", "/submit", None)  # empty body
+        assert status == 400
+        status, body = await _http(srv.port, "POST", "/submit", {"raster": [1, 2, 3]})
+        assert status == 400 and "raster" in json.loads(body)["error"]
+        status, body = await _http(
+            srv.port, "POST", "/submit",
+            {"raster": _raster().tolist(), "priority": "turbo"},
+        )
+        assert status == 400 and "priority" in json.loads(body)["error"]
+        status, body = await _http(srv.port, "POST", "/submit", {"uid": 1})
+        assert status == 400 and "missing 'raster'" in json.loads(body)["error"]
+        status, body = await _http(srv.port, "POST", "/stream", {"requests": []})
+        assert status == 400
+        status, _ = await _http(srv.port, "GET", "/nope")
+        assert status == 404
+        # after all that abuse, a clean request still serves
+        status, body = await _http(
+            srv.port, "POST", "/submit", {"raster": _raster().tolist()}
+        )
+        assert status == 200 and json.loads(body)["status"] == "completed"
+        await srv.stop()
+
+    asyncio.run(main())
+
+
+def test_parse_request_json_contract():
+    req = parse_request_json(
+        {"raster": _raster().tolist(), "priority": "best-effort",
+         "tenant": "t1", "deadline_s": 2.5},
+        uid=42,
+    )
+    assert req.uid == 42 and req.priority is Priority.BEST_EFFORT
+    assert req.tenant == "t1" and req.deadline_s == 2.5
+    assert parse_request_json({"raster": _raster().tolist(), "priority": 0}, 1
+                              ).priority is Priority.CRITICAL
+    with pytest.raises(ValueError, match="JSON object"):
+        parse_request_json([1, 2], 1)
