@@ -23,7 +23,13 @@ LIF network:
   latency, the degrade/reject/preempt counts, and critical-class SLO
   attainment: critical p99 must stay inside its deadline while
   best-effort absorbs the overload by degrading to the registered
-  coarser precision tier or being rejected at admission.
+  coarser precision tier or being rejected at admission;
+* **streaming sessions**: N concurrent forever-streams
+  (``repro.serve.streaming``) fed in fixed-size chunks round-robin --
+  steps/sec, chunks/sec, sessions/sec and per-chunk p50/p99 at each
+  concurrency, plus an eviction-churn variant where every stream's carry
+  round-trips through the checkpoint store between chunks (the cost of
+  parking idle streams on disk).
 
 Serial and engine passes are timed in interleaved rounds, best round per
 contender (machine-load spikes land on both equally and are discarded),
@@ -40,6 +46,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import tempfile
 import time
 
 import jax
@@ -51,6 +58,7 @@ from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
 from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy
 from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+from repro.serve.streaming import StreamConfig, StreamSessionManager
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT = _ROOT / "BENCH_serve.json"
@@ -59,8 +67,14 @@ FAST_OUT = _ROOT / "experiments" / "BENCH_serve_fast.json"
 BATCHES = (4, 8, 16)
 LOAD_FRACTIONS = (0.5, 0.8, 0.95)
 QOS_MULTIPLIERS = (10, 30, 100)
+# the three interactive classes of the overload sweep (STREAMING traffic is
+# measured by the dedicated streaming section instead)
+QOS_CLASSES = (Priority.CRITICAL, Priority.STANDARD, Priority.BEST_EFFORT)
 # traffic mix for the overload sweep, indexed by Priority value
 QOS_MIX = (0.10, 0.30, 0.60)  # critical / standard / best_effort
+STREAM_CONCURRENCY = (64, 256, 1024)
+STREAM_STEPS = 64  # raster steps each stream delivers
+STREAM_CHUNK = 16  # steps per feed
 
 
 def _mnist_net(T: int) -> NetworkConfig:
@@ -222,8 +236,8 @@ def run(fast: bool = False):
     # keep refining it): wall seconds per lane-step across the full pool
     qos_eng.metrics.seed_step_estimate(mb_load / (capacity * T))
     report["qos_sweep"] = {
-        "mix": {p.name.lower(): QOS_MIX[p.value] for p in Priority},
-        "deadline_slo_ms": {p.name.lower(): slos[p.value] * 1e3 for p in Priority},
+        "mix": {p.name.lower(): QOS_MIX[p.value] for p in QOS_CLASSES},
+        "deadline_slo_ms": {p.name.lower(): slos[p.value] * 1e3 for p in QOS_CLASSES},
         "degrade_tier": tier.name,
         "sweeps": {},
     }
@@ -248,7 +262,7 @@ def run(fast: bool = False):
         served = [r for r in done if r.status != "rejected"]
 
         classes = {}
-        for p in Priority:
+        for p in QOS_CLASSES:
             sub = [r for r in reqs if r.priority is p]
             lat = np.asarray(
                 [r.latency_s for r in sub if r.status != "rejected"]
@@ -291,6 +305,74 @@ def run(fast: bool = False):
             f";rejected={sum(r.status == 'rejected' for r in reqs)}"
             f";served_per_sec={entry['served_per_sec']:.1f}",
         ))
+
+    # streaming sessions: concurrent forever-streams fed in chunks.  Chunk
+    # latency (feed -> chunk served, queueing included) comes from the
+    # engine's STREAMING-class rolling window; one engine per concurrency so
+    # the windows do not bleed across runs.
+    stream_concurrency = STREAM_CONCURRENCY if not fast else (32,)
+    stream_steps = STREAM_STEPS if not fast else 16
+    report["streaming"] = {}
+
+    def _stream_run(n_streams, evict_dir=None):
+        eng = SNNServeEngine(net, qparams, max_batch=mb_load, tick_stride=16)
+        eng.warmup(2 * STREAM_CHUNK)
+        mgr = StreamSessionManager(
+            eng,
+            checkpoint_dir=evict_dir,
+            config=StreamConfig(window=2 * STREAM_CHUNK, stride=STREAM_CHUNK,
+                                idle_budget=None),
+        )
+        for i in range(n_streams):
+            mgr.open(f"s{i}")
+        # tiny warm pass so the first measured chunk is not a compile
+        mgr.feed("s0", rasters[0][:STREAM_CHUNK])
+        mgr.pump()
+        t0 = time.perf_counter()
+        for lo in range(0, stream_steps, STREAM_CHUNK):
+            for i in range(n_streams):
+                raster = rasters[i % len(rasters)]
+                chunk = np.tile(raster, (2, 1))[lo % T:, :][:STREAM_CHUNK]
+                mgr.feed(f"s{i}", chunk)
+            mgr.pump()
+            if evict_dir is not None:  # churn: park every carry on disk
+                for i in range(n_streams):
+                    mgr.evict(f"s{i}")
+        wall = time.perf_counter() - t0
+        lat = eng.metrics.latency[Priority.STREAMING]
+        now = time.perf_counter()
+        return {
+            "streams": n_streams,
+            "steps_per_sec": n_streams * stream_steps / wall,
+            "chunks_per_sec": n_streams * (stream_steps // STREAM_CHUNK) / wall,
+            "sessions_per_sec": n_streams / wall,
+            "chunk_p50_ms": lat.percentile(50, now) * 1e3,
+            "chunk_p99_ms": lat.percentile(99, now) * 1e3,
+            "evictions": eng.metrics.counters["sessions_evicted"],
+            "restores": eng.metrics.counters["sessions_restored"],
+        }, wall
+
+    for n_streams in stream_concurrency:
+        entry, wall = _stream_run(n_streams)
+        report["streaming"][f"{n_streams}"] = entry
+        rows.append((
+            f"serve/stream-{n_streams}",
+            wall * 1e6,
+            f"steps_per_sec={entry['steps_per_sec']:.0f}"
+            f";chunk_p50_ms={entry['chunk_p50_ms']:.2f}"
+            f";chunk_p99_ms={entry['chunk_p99_ms']:.2f}",
+        ))
+
+    churn_streams = stream_concurrency[min(1, len(stream_concurrency) - 1)]
+    with tempfile.TemporaryDirectory(prefix="neura-stream-bench-") as tmp:
+        entry, wall = _stream_run(churn_streams, evict_dir=pathlib.Path(tmp))
+    report["streaming"]["eviction_churn"] = entry
+    rows.append((
+        f"serve/stream-churn-{churn_streams}",
+        wall * 1e6,
+        f"steps_per_sec={entry['steps_per_sec']:.0f}"
+        f";evictions={entry['evictions']};restores={entry['restores']}",
+    ))
 
     out = FAST_OUT if fast else OUT
     out.parent.mkdir(exist_ok=True)

@@ -25,13 +25,24 @@ import os
 import pathlib
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
 
-__all__ = ["Checkpointer", "latest_step"]
+__all__ = ["Checkpointer", "CheckpointCorruptError", "latest_step"]
 
 _SEP = "::"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint on disk failed integrity verification.
+
+    Raised by :meth:`Checkpointer.restore` when the manifest is unreadable,
+    the array container is damaged, or a leaf's content no longer matches
+    its recorded CRC -- a clear refusal instead of silently handing back
+    garbage state (the streaming-session resume path depends on this).
+    """
 
 
 def _flatten_with_paths(tree):
@@ -69,6 +80,11 @@ class Checkpointer:
             "keys": sorted(flat),
             "shapes": {k: list(v.shape) for k, v in flat.items()},
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            # content CRCs: npz stores raw .npy members, so a flipped byte
+            # would otherwise decode into a plausible-looking garbage array
+            "crc32": {
+                k: zlib.crc32(np.ascontiguousarray(v).tobytes()) for k, v in flat.items()
+            },
             "user_state": user_state or {},
             "time": time.time(),
         }
@@ -126,14 +142,29 @@ class Checkpointer:
         ``template`` supplies the treedef (any pytree with the right
         structure, e.g. abstract params); arrays come from disk.
         Returns (tree, user_state).
+
+        Integrity: the manifest and array container must parse, and every
+        loaded leaf is verified against the per-leaf CRC the save recorded
+        (checkpoints from before CRCs were recorded restore unverified).
+        Any mismatch raises :class:`CheckpointCorruptError` -- bit rot or a
+        truncated write must never restore as a plausible garbage tree.
         """
         self.wait()
         step = step if step is not None else latest_step(self.root)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {self.root}")
         d = self.root / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        arrays = np.load(d / "arrays.npz")
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            arrays = np.load(d / "arrays.npz")
+        except FileNotFoundError:
+            raise
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} under {self.root} is unreadable "
+                f"({type(e).__name__}: {e}); refusing to restore"
+            ) from e
+        crcs = manifest.get("crc32", {})
 
         paths, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
@@ -143,7 +174,20 @@ class Checkpointer:
             )
             if key not in arrays:
                 raise KeyError(f"checkpoint missing leaf {key!r} (step {step})")
-            leaves.append(arrays[key])
+            try:
+                leaf = arrays[key]
+            except Exception as e:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: leaf {key!r} failed to decode "
+                    f"({type(e).__name__}: {e}); refusing to restore"
+                ) from e
+            if key in crcs and zlib.crc32(np.ascontiguousarray(leaf).tobytes()) != crcs[key]:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: leaf {key!r} failed CRC "
+                    "verification (content does not match what was saved); "
+                    "refusing to restore a corrupted carry"
+                )
+            leaves.append(leaf)
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -992,8 +992,13 @@ def batched_lane_window(
                     chunk's steps fall inside its own window.  Recorded
                     outputs are masked past a lane's validity (residual
                     membrane charge could otherwise keep firing on
-                    zero-input padding steps), so a lane may *complete
-                    mid-chunk* bit-exactly.  ``None`` records every step.
+                    zero-input padding steps), and the lane's *carry* is
+                    frozen at the validity boundary (padding steps would
+                    otherwise decay the membrane and advance ``prev_spk``),
+                    so a lane may *complete mid-chunk* bit-exactly and its
+                    post-chunk state is exactly the state after its last
+                    valid step -- the seam streaming sessions snapshot and
+                    resume from.  ``None`` records every step.
 
     Returns ``(states, out_spikes [k, n_lanes, n_classes], emitted
     [k, n_layers, n_lanes])`` -- the final layer's per-step spikes plus
@@ -1037,6 +1042,9 @@ def batched_lane_window(
     )
     k = x_chunk.shape[0]
     x = x_chunk.astype(jnp.int32)
+    live = None
+    if valid_steps is not None:
+        live = jnp.arange(k)[:, None] < valid_steps[None, :]  # [k, n_lanes]
     new_states, emitted = [], []
     for li, (cfg, p, st) in enumerate(zip(net.layers, qparams, states)):
         if li == 0 and event_budget is not None:
@@ -1045,15 +1053,15 @@ def batched_lane_window(
             currents = _ff_currents_f32_exact(x, p.w_ff)
         else:
             currents = spike_integrate(x, p.w_ff, use_pallas=False)
-        st, x = int_layer_window_carry(cfg, p, st, currents)
+        st, x = int_layer_window_carry(cfg, p, st, currents, live=live)
         new_states.append(st)
         emitted.append(jnp.sum(x, axis=-1))  # [k, n_lanes]
     out_spikes = x
     emitted = jnp.stack(emitted, axis=1)  # [k, n_layers, n_lanes]
-    if valid_steps is not None:
-        live = (jnp.arange(k)[:, None] < valid_steps[None, :]).astype(jnp.int32)
-        out_spikes = out_spikes * live[:, :, None]
-        emitted = emitted * live[:, None, :]
+    if live is not None:
+        live_i = live.astype(jnp.int32)
+        out_spikes = out_spikes * live_i[:, :, None]
+        emitted = emitted * live_i[:, None, :]
     return new_states, out_spikes, emitted
 
 

@@ -311,7 +311,7 @@ def int_layer_window(cfg: LayerConfig, params: IntLayerParams, raster) -> jax.Ar
 
 
 def int_layer_window_carry(
-    cfg: LayerConfig, params: IntLayerParams, state: LayerState, ff_currents
+    cfg: LayerConfig, params: IntLayerParams, state: LayerState, ff_currents, live=None
 ) -> tuple[LayerState, jax.Array]:
     """Carried-state form of :func:`int_layer_window_from_currents`.
 
@@ -321,13 +321,25 @@ def int_layer_window_carry(
     two consecutive chunks through this function is bit-identical to one
     longer window, which is bit-identical to iterated
     :func:`int_layer_step`.
+
+    ``live`` (optional bool [T, batch]) freezes a batch element's carry once
+    its liveness goes False: the step still computes, but the committed state
+    is the pre-step state, so the returned carry is *exactly* the state after
+    that element's last live step.  This is the chunk-quantisation seam for
+    persistent streams: a caller may pad a lane's chunk past its real data
+    and still read back a bit-exact carry at the data boundary (padding
+    steps would otherwise decay the membrane / advance ``prev_spk``).
+    Spikes emitted on dead steps are garbage-but-harmless: downstream
+    layers' states are frozen on the same mask, and window callers mask
+    recorded outputs.
     """
     beta_code = cfg.beta_code()
     alpha_code = cfg.alpha_code()
 
-    def step(state, c_t):
+    def step(state, inp):
+        c_t = inp if live is None else inp[0]
         u, i_syn = _integrate_acc(cfg, params, state, c_t)
-        state, spk = int_phase_b(
+        new_state, spk = int_phase_b(
             cfg,
             params,
             u,
@@ -335,9 +347,17 @@ def int_layer_window_carry(
             lambda x: coeff_gen.apply_decay(x, beta_code),
             lambda x: coeff_gen.apply_decay(x, alpha_code),
         )
-        return state, spk
+        if live is not None:
+            live_t = inp[1][:, None]  # [batch, 1]
+            new_state = jax.tree.map(
+                lambda n, o: jnp.where(live_t, n, o), new_state, state
+            )
+        return new_state, spk
 
-    return jax.lax.scan(step, state, ff_currents.astype(jnp.int32))
+    xs = ff_currents.astype(jnp.int32)
+    if live is not None:
+        xs = (xs, live)
+    return jax.lax.scan(step, state, xs)
 
 
 def int_layer_window_from_currents(

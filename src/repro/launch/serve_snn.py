@@ -26,8 +26,19 @@ policy.
         --degrade-bits 4 3 --deadline-ms 50
 
 ``--http`` skips the replay and serves the asyncio HTTP front-end instead
-(``POST /submit``, ``POST /stream``, ``GET /metrics``, ``GET /healthz`` --
-see ``repro.serve.http``); port 0 picks a free port and prints it.
+(``POST /submit``, ``POST /stream``, ``GET /metrics``, ``GET /healthz``,
+plus the ``POST /session/*`` streaming-session routes -- see
+``repro.serve.http``); port 0 picks a free port and prints it.
+
+    PYTHONPATH=src python -m repro.launch.serve_snn --streaming 64 \
+        --stream-steps 400 --stream-chunk 16 --stream-idle 8
+
+``--streaming`` replays a synthetic multi-stream workload instead of a
+request batch: N concurrent forever-streams (``repro.serve.streaming``
+sessions) fed random-sized chunks in random interleavings, with idle
+sessions evicted to a checkpoint store and resumed bit-exactly on their
+next chunk.  Prints stream throughput (steps/s, chunks/s, readouts/s) and
+the eviction/restore churn.
 """
 
 from __future__ import annotations
@@ -44,6 +55,11 @@ from repro.data.snn_datasets import mnist_like
 from repro.serve.http import SNNHttpServer
 from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy
 from repro.serve.snn_engine import AsyncSNNServer, SNNRequest, SNNServeEngine
+from repro.serve.streaming import (
+    AsyncStreamServer,
+    StreamConfig,
+    StreamSessionManager,
+)
 
 
 def _build_net(hidden: int, T: int) -> NetworkConfig:
@@ -55,6 +71,80 @@ def _build_net(hidden: int, T: int) -> NetworkConfig:
         n_steps=T,
         name=f"serve-256-{hidden}-10",
     )
+
+
+def _run_streaming(args, net, engine) -> None:
+    """Synthetic multi-stream replay: N sessions, random chunk sizes and
+    interleavings, optional idle-eviction churn through the checkpointer."""
+    import tempfile
+    import time
+
+    rng = np.random.default_rng(args.seed)
+    ckpt = args.stream_ckpt
+    if ckpt is None and args.stream_idle is not None:
+        ckpt = tempfile.mkdtemp(prefix="neura-stream-ckpt-")
+    manager = StreamSessionManager(
+        engine,
+        checkpoint_dir=ckpt,
+        config=StreamConfig(
+            window=args.stream_window,
+            stride=args.stream_stride,
+            idle_budget=args.stream_idle,
+        ),
+    )
+    density = args.density if args.density is not None else 0.2
+    # warmup resets pool + metrics: run it before any session bookkeeping
+    engine.warmup(max(2 * args.stream_chunk, 8),
+                  compilation_cache_dir=args.compile_cache)
+    remaining = {}
+    for i in range(args.streaming):
+        s = manager.open(f"stream{i}")
+        remaining[s.sid] = args.stream_steps
+
+    t0 = time.perf_counter()
+    while any(remaining.values()) or not all(
+        s.drained for s in manager.sessions.values()
+    ):
+        for sid, left in remaining.items():
+            # random interleaving: each poll round, each stream may feed
+            if left and rng.random() < 0.5:
+                n = int(min(left, max(1, rng.poisson(args.stream_chunk))))
+                chunk = (rng.random((n, net.n_in)) < density).astype(np.uint8)
+                manager.feed(sid, chunk)
+                remaining[sid] = left - n
+        manager.poll()
+    span = time.perf_counter() - t0
+
+    snap = engine.metrics.snapshot()
+    c = snap["counters"]
+    total_steps = args.streaming * args.stream_steps
+    total_readouts = sum(s.n_readouts for s in manager.sessions.values())
+    print(
+        f"streamed {args.streaming} sessions x {args.stream_steps} steps on "
+        f"{net.name} (max_batch={engine.max_batch}, "
+        f"chunk~{args.stream_chunk}, window={args.stream_window}, "
+        f"stride={args.stream_stride})"
+    )
+    print(
+        f"  throughput : {total_steps / span:.0f} steps/s  "
+        f"{c.get('session_chunks', 0) / span:.1f} chunks/s  "
+        f"{total_readouts / span:.1f} readouts/s  over {span * 1e3:.0f} ms"
+    )
+    ro = snap["streaming"]["readout_latency_ms"]
+    print(
+        f"  readout lat: p50={ro['p50']:.2f} ms  p99={ro['p99']:.2f} ms  "
+        f"(n={ro['window_count']})"
+    )
+    print(
+        f"  churn      : evictions={c.get('sessions_evicted', 0)} "
+        f"restores={c.get('sessions_restored', 0)} ticks={engine.n_ticks}"
+    )
+    for sid in list(manager.sessions)[:3]:
+        s = manager.sessions[sid]
+        print(
+            f"  {sid}: t_total={s.t_total} chunks={s.n_chunks} "
+            f"readouts={s.n_readouts} evictions={s.n_evictions}"
+        )
 
 
 def main():
@@ -93,6 +183,21 @@ def main():
     ap.add_argument("--http", type=int, default=None, metavar="PORT",
                     help="serve the HTTP front-end on this port instead of "
                     "replaying a workload (0 = pick a free port)")
+    ap.add_argument("--streaming", type=int, default=None, metavar="N",
+                    help="replay a synthetic workload of N concurrent "
+                    "streaming sessions instead of a request batch")
+    ap.add_argument("--stream-steps", type=int, default=200,
+                    help="total raster steps each stream delivers")
+    ap.add_argument("--stream-chunk", type=int, default=16,
+                    help="mean chunk size (steps) of each feed")
+    ap.add_argument("--stream-window", type=int, default=16)
+    ap.add_argument("--stream-stride", type=int, default=8)
+    ap.add_argument("--stream-idle", type=int, default=None,
+                    help="idle-poll budget before a drained session is "
+                    "evicted to the checkpoint store (default: no eviction)")
+    ap.add_argument("--stream-ckpt", default=None, metavar="DIR",
+                    help="checkpoint directory for evicted session carries "
+                    "(default: a temp dir when --stream-idle is set)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -124,15 +229,34 @@ def main():
         engine.warmup(args.T, compilation_cache_dir=args.compile_cache)
 
         async def _serve_http():
-            server = SNNHttpServer(AsyncSNNServer(engine), port=args.http)
+            async_server = AsyncSNNServer(engine)
+            manager = StreamSessionManager(
+                engine,
+                checkpoint_dir=args.stream_ckpt,
+                config=StreamConfig(
+                    window=args.stream_window,
+                    stride=args.stream_stride,
+                    idle_budget=args.stream_idle,
+                ),
+            )
+            server = SNNHttpServer(
+                async_server,
+                port=args.http,
+                streaming=AsyncStreamServer(async_server, manager),
+            )
             await server.start()
             print(
                 f"serving on http://{server.host}:{server.port} "
-                "(POST /submit, POST /stream, GET /metrics, GET /healthz)"
+                "(POST /submit, POST /stream, POST /session/*, "
+                "GET /metrics, GET /healthz)"
             )
             await server.serve_forever()
 
         asyncio.run(_serve_http())
+        return
+
+    if args.streaming is not None:
+        _run_streaming(args, net, engine)
         return
 
     rng = np.random.default_rng(args.seed)

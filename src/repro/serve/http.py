@@ -23,6 +23,30 @@ endpoints:
 ``GET /healthz``
     Liveness + queue/lane gauges as JSON.
 
+Streaming sessions (when the server is built with an
+:class:`~repro.serve.streaming.AsyncStreamServer`):
+
+``POST /session/open``
+    Body: ``{"sid"?: str, "window"?, "stride"?, "idle_budget"?,
+    "tenant"?}`` (omitted knobs take the manager's defaults).  Answers the
+    new session's summary; ``sid`` collisions are a ``400``.
+``POST /session/feed``
+    Body: ``{"session": sid, "chunk": [[...step...], ...]}``.  Appends the
+    raster steps to the stream (restoring an evicted session first),
+    drives the session until the chunk is fully absorbed, and answers with
+    the readouts this feed produced.  Unknown session: ``404``; closed:
+    ``409``; pending-buffer overflow: ``429`` (back-pressure -- nothing
+    was accepted); unrestorable checkpoint: ``500`` with the corruption
+    message.  A client that disconnects mid-feed loses only the response:
+    the chunk still serves and the session stays resumable.
+``POST /session/stream``
+    Body: ``{"session": sid}``.  Long-lived NDJSON subscription: one line
+    per readout as the stream produces them (from *any* connection's
+    feeds), a final summary line at session close.
+``POST /session/close``
+    Body: ``{"session": sid}``.  Finalises the session, answers its
+    lifetime summary.  Double-close is a ``409``.
+
 Malformed JSON or a bad raster answers ``400`` with the error message;
 anything else that escapes a handler answers ``500`` (and the serving loop
 survives -- fault-injection tests drive all three).
@@ -42,6 +66,13 @@ import numpy as np
 
 from repro.serve.scheduler import Priority
 from repro.serve.snn_engine import AsyncSNNServer, SNNRequest
+from repro.serve.streaming import (
+    AsyncStreamServer,
+    SessionClosedError,
+    StreamError,
+    StreamOverflowError,
+    UnknownSessionError,
+)
 
 __all__ = ["SNNHttpServer", "parse_request_json", "result_json"]
 
@@ -100,11 +131,21 @@ class SNNHttpServer:
     the engine's control plane, this class only translates HTTP.
     """
 
-    def __init__(self, server: AsyncSNNServer, host: str = "127.0.0.1", port: int = 0):
+    def __init__(
+        self,
+        server: AsyncSNNServer,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        streaming: AsyncStreamServer | None = None,
+        stream_tick_s: float = 0.05,
+    ):
         self.server = server
         self.host = host
         self.port = port
+        self.streaming = streaming
+        self.stream_tick_s = stream_tick_s
         self._srv: asyncio.base_events.Server | None = None
+        self._ticker: asyncio.Task | None = None
         self._uid = itertools.count(1_000_000)  # server-assigned uids
 
     @property
@@ -115,13 +156,29 @@ class SNNHttpServer:
     async def start(self) -> "SNNHttpServer":
         self._srv = await asyncio.start_server(self._handle, self.host, self.port)
         self.port = self._srv.sockets[0].getsockname()[1]
+        if self.streaming is not None and self.stream_tick_s > 0:
+            self._ticker = asyncio.get_running_loop().create_task(self._idle_ticker())
         return self
 
     async def stop(self) -> None:
+        if self._ticker is not None:
+            self._ticker.cancel()
+            try:
+                await self._ticker
+            except asyncio.CancelledError:
+                pass
+            self._ticker = None
         if self._srv is not None:
             self._srv.close()
             await self._srv.wait_closed()
             self._srv = None
+
+    async def _idle_ticker(self) -> None:
+        """Housekeeping heartbeat: ages drained sessions toward eviction
+        while no feed traffic is flowing."""
+        while True:
+            await asyncio.sleep(self.stream_tick_s)
+            self.streaming.idle_tick()
 
     async def serve_forever(self) -> None:
         if self._srv is None:
@@ -151,10 +208,20 @@ class SNNHttpServer:
                 await self._submit(writer, body)
             elif path == "/stream" and method == "POST":
                 await self._stream(writer, body)
+            elif path.startswith("/session/") and method == "POST":
+                await self._session(writer, path, body)
             else:
                 await self._respond_json(
                     writer, 404, {"error": f"no route for {method} {path}"}
                 )
+        except UnknownSessionError as e:
+            await self._respond_json(writer, 404, {"error": str(e)}, best_effort=True)
+        except SessionClosedError as e:
+            await self._respond_json(writer, 409, {"error": str(e)}, best_effort=True)
+        except StreamOverflowError as e:
+            await self._respond_json(writer, 429, {"error": str(e)}, best_effort=True)
+        except StreamError as e:  # e.g. an unrestorable (corrupt) checkpoint
+            await self._respond_json(writer, 500, {"error": str(e)}, best_effort=True)
         except (ValueError, json.JSONDecodeError) as e:
             await self._respond_json(writer, 400, {"error": str(e)}, best_effort=True)
         except (ConnectionError, asyncio.IncompleteReadError):
@@ -230,8 +297,74 @@ class SNNHttpServer:
                 self.metrics.inc("http_disconnects")
                 break
 
+    # -- streaming sessions --------------------------------------------------
+    async def _session(self, writer, path: str, body: bytes) -> None:
+        if self.streaming is None:
+            await self._respond_json(
+                writer, 404, {"error": "streaming sessions are not enabled"}
+            )
+            return
+        obj = json.loads(body.decode()) if body else {}
+        if not isinstance(obj, dict):
+            raise ValueError(f"body must be a JSON object, got {type(obj).__name__}")
+        if path == "/session/open":
+            overrides = {
+                k: obj[k]
+                for k in ("window", "stride", "idle_budget", "tenant",
+                          "max_pending_steps", "max_chunk_steps")
+                if k in obj
+            }
+            s = self.streaming.open(obj.get("sid"), **overrides)
+            await self._respond_json(writer, 200, s.summary())
+        elif path == "/session/feed":
+            sid = str(obj.get("session", ""))
+            if "chunk" not in obj:
+                raise ValueError("feed is missing 'chunk'")
+            chunk = np.asarray(obj["chunk"], np.int64)
+            s, readouts = await self.streaming.feed(sid, chunk)
+            await self._respond_json(writer, 200, {
+                "session": s.sid,
+                "state": s.state,
+                "t_total": s.t_total,
+                "readouts": [r.to_json() for r in readouts],
+            })
+        elif path == "/session/stream":
+            await self._session_stream(writer, str(obj.get("session", "")))
+        elif path == "/session/close":
+            summary = self.streaming.close(str(obj.get("session", "")))
+            await self._respond_json(writer, 200, summary)
+        else:
+            await self._respond_json(
+                writer, 404, {"error": f"no route for POST {path}"}
+            )
+
+    async def _session_stream(self, writer, sid: str) -> None:
+        """Long-lived NDJSON readout subscription for one session."""
+        mgr = self.streaming.manager
+        queue: asyncio.Queue = asyncio.Queue()
+        mgr.subscribe(sid, queue.put_nowait)  # raises 404/409 before headers
+        session = mgr.sessions[sid]
+        writer.write(
+            b"HTTP/1.1 200 OK\r\n"
+            b"Content-Type: application/x-ndjson\r\n"
+            b"Connection: close\r\n\r\n"
+        )
+        try:
+            while True:
+                r = await queue.get()
+                line = session.summary() if r is None else r.to_json()
+                writer.write((json.dumps(line) + "\n").encode())
+                await writer.drain()
+                if r is None:  # end-of-stream sentinel from close()
+                    break
+        except (ConnectionError, OSError):
+            self.metrics.inc("http_disconnects")
+        finally:  # a vanished subscriber must not leak its listener
+            if queue.put_nowait in session._listeners:
+                session._listeners.remove(queue.put_nowait)
+
     # -- response plumbing ---------------------------------------------------
-    _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+    _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found", 409: "Conflict",
                 429: "Too Many Requests", 500: "Internal Server Error"}
 
     async def _respond(

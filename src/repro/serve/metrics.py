@@ -89,6 +89,13 @@ class ServeMetrics:
         self.latency_all = RollingWindow(window_s, max_samples)
         self.queue_depth = RollingWindow(window_s, max_samples)
         self.lane_occupancy = RollingWindow(window_s, max_samples)  # fraction 0..1
+        # -- streaming sessions (repro.serve.streaming) ----------------------
+        # gauges are set by the session manager; counters ride self.counters
+        # (sessions_opened / sessions_closed / sessions_evicted /
+        # sessions_restored / session_chunks / session_readouts)
+        self.live_sessions = 0  # gauge: open sessions currently resident
+        self.evicted_sessions = 0  # gauge: open sessions parked on disk
+        self.readout_latency = RollingWindow(window_s, max_samples)  # feed->readout s
         self._est_step_s: float | None = None
         self.dispatch_s = 0.0  # cumulative host scheduling/bookkeeping wall
         self.tick_s = 0.0  # cumulative jitted-advance wall (incl. readback)
@@ -183,6 +190,17 @@ class ServeMetrics:
                 "p99": self.lane_occupancy.percentile(99, now),
             },
             "event_route_hit_rate": self.event_route_hit_rate(),
+            "streaming": {
+                "live_sessions": self.live_sessions,
+                "evicted_sessions": self.evicted_sessions,
+                "evictions": self.counters["sessions_evicted"],
+                "resumes": self.counters["sessions_restored"],
+                "readout_latency_ms": {
+                    "p50": self.readout_latency.percentile(50, now) * 1e3,
+                    "p99": self.readout_latency.percentile(99, now) * 1e3,
+                    "window_count": self.readout_latency.count(now),
+                },
+            },
             "est_step_s": self._est_step_s,
             "ticks": self.n_ticks,
             "steps": self.n_steps,
@@ -228,6 +246,27 @@ class ServeMetrics:
         lines.append(f"neura_lane_occupancy {occ[-1] if occ else 0:.6g}")
         lines.append("# TYPE neura_event_route_hit_rate gauge")
         lines.append(f"neura_event_route_hit_rate {self.event_route_hit_rate():.6g}")
+        lines.append("# TYPE neura_stream_sessions gauge")
+        lines.append(f'neura_stream_sessions{{state="live"}} {self.live_sessions}')
+        lines.append(f'neura_stream_sessions{{state="evicted"}} {self.evicted_sessions}')
+        lines.append("# TYPE neura_stream_events_total counter")
+        for event in (
+            "sessions_opened",
+            "sessions_closed",
+            "sessions_evicted",
+            "sessions_restored",
+            "session_chunks",
+            "session_readouts",
+        ):
+            lines.append(
+                f'neura_stream_events_total{{event="{event}"}} {self.counters[event]}'
+            )
+        lines.append("# TYPE neura_stream_readout_latency_seconds summary")
+        for q in (0.5, 0.99):
+            lines.append(
+                f'neura_stream_readout_latency_seconds{{quantile="{q}"}} '
+                f"{self.readout_latency.percentile(q * 100, now):.6g}"
+            )
         lines.append("# TYPE neura_ticks_total counter")
         lines.append(f"neura_ticks_total {self.n_ticks}")
         lines.append("# TYPE neura_steps_total counter")

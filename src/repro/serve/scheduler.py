@@ -57,11 +57,20 @@ __all__ = ["Priority", "SchedPolicy", "PrecisionTier", "Scheduler"]
 
 
 class Priority(enum.IntEnum):
-    """Request priority class; lower value = more urgent."""
+    """Request priority class; lower value = more urgent.
+
+    ``STREAMING`` is the persistent-session traffic class
+    (``repro.serve.streaming``): a stream's chunk requests are continuous
+    background work -- below the interactive classes in strict order, but
+    with their own DRR credit line (default weight above BEST_EFFORT's), so
+    open sessions keep advancing under interactive overload instead of
+    starving behind it.
+    """
 
     CRITICAL = 0  # latency-critical (wearable / prosthetic control loops)
     STANDARD = 1
     BEST_EFFORT = 2
+    STREAMING = 3  # persistent-session chunk traffic (repro.serve.streaming)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,9 +79,11 @@ class SchedPolicy:
 
     ``class_weights``
         Admission credits per deficit-round-robin cycle for
-        (CRITICAL, STANDARD, BEST_EFFORT).  All must be >= 1: a zero
-        weight would starve that class outright, which the scheduler
-        explicitly guarantees against.
+        (CRITICAL, STANDARD, BEST_EFFORT, STREAMING).  All must be >= 1:
+        a zero weight would starve that class outright, which the
+        scheduler explicitly guarantees against.  A legacy 3-tuple (the
+        pre-streaming interactive classes) is accepted and extended with
+        the default STREAMING weight.
     ``tenant_weights``
         Per-tenant WFQ weight within a class (default 1.0).  A tenant
         with weight 2 receives ~2x the admitted *work* (step count, not
@@ -87,7 +98,7 @@ class SchedPolicy:
         decisions (> 1 = degrade earlier, more conservatively).
     """
 
-    class_weights: tuple[int, int, int] = (8, 3, 1)
+    class_weights: tuple[int, ...] = (8, 3, 1, 2)
     tenant_weights: Mapping[str, float] | None = None
     preempt: bool = True
     preempt_min_remaining_steps: int = 4
@@ -95,6 +106,11 @@ class SchedPolicy:
     deadline_safety: float = 1.0
 
     def __post_init__(self):
+        if len(self.class_weights) == len(Priority) - 1:
+            # legacy 3-class weights: extend with the default STREAMING credit
+            object.__setattr__(
+                self, "class_weights", tuple(self.class_weights) + (2,)
+            )
         if len(self.class_weights) != len(Priority):
             raise ValueError(
                 f"class_weights needs one weight per class, got {self.class_weights}"

@@ -178,6 +178,17 @@ class SNNRequest:
     _sched_seq: int | None = dataclasses.field(default=None, repr=False)
     _suspended: tuple | None = dataclasses.field(default=None, repr=False)
     _finalized: bool = dataclasses.field(default=False, repr=False)
+    # -- streaming-session seam (repro.serve.streaming) ----------------------
+    # A chunk request continues a persistent stream: ``_carry_in`` is a
+    # lane_state_take snapshot restored at admission instead of zeroing the
+    # lane, ``_want_carry`` asks for the post-window carry back on
+    # ``carry_out``, and ``_record_steps`` keeps the final layer's per-step
+    # spike vectors on ``step_outputs`` (the sliding-window readout input).
+    _carry_in: list | None = dataclasses.field(default=None, repr=False)
+    _want_carry: bool = dataclasses.field(default=False, repr=False)
+    _record_steps: bool = dataclasses.field(default=False, repr=False)
+    carry_out: list | None = dataclasses.field(default=None, repr=False)
+    step_outputs: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         self.priority = Priority(self.priority)  # raises on unknown classes
@@ -342,6 +353,7 @@ class _Lane:
     fresh: bool = True  # device state must be zeroed on the next tick
     counts: np.ndarray | None = None  # [n_classes] running output spikes
     layer_events: list = dataclasses.field(default_factory=list)  # per tick [L]
+    step_out: list | None = None  # per tick [valid, n_classes] (streaming readout)
 
 
 class SNNServeEngine:
@@ -539,11 +551,19 @@ class SNNServeEngine:
         self.sched.add(req)
 
     def _routes_to_event(self, req: SNNRequest) -> bool:
-        """Direct (out-of-jit) sparse route: eager csr/gather strategies only."""
+        """Direct (out-of-jit) sparse route: eager csr/gather strategies only.
+
+        Streaming chunk requests never take it -- the direct route runs a
+        fresh-state single-sample ``run_int``, which cannot restore or
+        return a lane carry; they stay in the lane pool (where the jitted
+        ``"event-pallas"`` sparse route still applies per tick).
+        """
         return (
             self.event_backend is not None
             and self._event_budget is None
             and req.density <= self.sparse_admission_threshold
+            and req._carry_in is None
+            and not req._want_carry
         )
 
     def _sparse_lane_eligible(self, req: SNNRequest) -> bool:
@@ -688,11 +708,21 @@ class SNNServeEngine:
             req.admitted_seq = self._admit_seq
             self._admit_seq += 1
         req.route = "event-pallas" if self._sparse_lane_eligible(req) else "lanes"
-        self._lanes[slot] = _Lane(
+        lane = _Lane(
             req=req,
             admitted_wall=now,
             counts=np.zeros(self.net.n_classes, np.int64),
         )
+        if req._record_steps:
+            lane.step_out = []
+        if req._carry_in is not None:
+            # a streaming chunk resumes its stream's persistent carry: write
+            # the snapshot over whatever the slot last held instead of
+            # zeroing (fresh=False keeps the reset flag off)
+            self._states = lane_state_put(self._states, slot, req._carry_in)
+            lane.fresh = False
+            req._carry_in = None
+        self._lanes[slot] = lane
 
     def _pick_victim(self) -> int | None:
         """Preemption victim: the non-critical lane with the most window
@@ -849,6 +879,8 @@ class SNNServeEngine:
             valid = int(meta[1, i])
             lane.counts += packed[:, i, :n_classes].sum(axis=0)  # masked past valid
             lane.layer_events.append(packed[:valid, i, n_classes:])  # [valid, L]
+            if lane.step_out is not None:
+                lane.step_out.append(packed[:valid, i, :n_classes].copy())
             lane.t += valid
             if lane.t >= lane.req.n_steps:
                 finished.append(self._complete_lane(i, now))
@@ -858,6 +890,18 @@ class SNNServeEngine:
         lane = self._lanes[slot]
         self._lanes[slot] = None  # freed immediately: next dispatch may reuse it
         req = lane.req
+        if req._want_carry:
+            # the freeze in batched_lane_window pinned the slot's state at
+            # this lane's validity boundary, so the snapshot is exactly the
+            # carry after the request's last real step -- even when the
+            # pow2 chunk overshot the window
+            req.carry_out = lane_state_take(self._states, slot)
+        if lane.step_out is not None:
+            req.step_outputs = (
+                np.concatenate(lane.step_out, axis=0)
+                if lane.step_out
+                else np.zeros((0, self.net.n_classes), np.int64)
+            )
         req.spike_counts = lane.counts
         req.service_s = now - lane.admitted_wall
         self._finish(req, now, stats_src=("chunks", lane.layer_events))

@@ -223,7 +223,8 @@ def test_scheduler_snapshot_structure():
     snap = sched.snapshot()
     assert snap["depth"] == 1
     assert snap["classes"]["CRITICAL"]["a"] == [7]
-    assert set(snap["credits"]) == {"CRITICAL", "STANDARD", "BEST_EFFORT"}
+    assert set(snap["credits"]) == {
+        "CRITICAL", "STANDARD", "BEST_EFFORT", "STREAMING"}
 
 
 def test_invalid_priority_rejected():

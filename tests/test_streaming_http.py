@@ -1,0 +1,343 @@
+"""Fault injection for the streaming-session HTTP surface.
+
+Real sockets against the real server, no HTTP client dependency (matching
+``test_serve_http.py``).  The session protocol must contain every
+client-side failure mode:
+
+* a client that vanishes mid-feed loses only its response -- the chunk
+  still serves, the carry still lands, and the session stays resumable
+  from another connection;
+* double-close and feed-after-close answer clean ``409``s, unknown
+  sessions ``404``, a full pending buffer ``429`` (and the refused chunk
+  is not partially absorbed);
+* a wedged engine fails an in-progress feed with ``EngineStalledError``
+  instead of hanging the connection;
+* a corrupted on-disk checkpoint is rejected with a clear error (``500``
+  naming the session and the corruption) -- never restored as plausible
+  garbage state.
+"""
+
+import asyncio
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel, ResetMode, Topology
+from repro.serve.http import SNNHttpServer
+from repro.serve.scheduler import Scheduler
+from repro.serve.snn_engine import (
+    AsyncSNNServer,
+    EngineStalledError,
+    SNNServeEngine,
+)
+from repro.serve.streaming import (
+    AsyncStreamServer,
+    StreamConfig,
+    StreamSessionManager,
+)
+
+NET = NetworkConfig(
+    layers=(
+        LayerConfig(n_in=16, n_out=10, neuron=NeuronModel.LIF, topology=Topology.FF,
+                    reset=ResetMode.SUBTRACT, beta=0.9),
+        LayerConfig(n_in=10, n_out=4, neuron=NeuronModel.LIF,
+                    reset=ResetMode.ZERO, beta=0.77),
+    ),
+    n_steps=8,
+)
+_params = init_float_params(jax.random.PRNGKey(0), NET)
+QPARAMS, _ = quantize_params(NET, _params)
+
+
+def _raster(T=8, seed=0, rate=0.4):
+    rng = np.random.default_rng(seed)
+    return (rng.random((T, NET.n_in)) < rate).astype(np.int32)
+
+
+def _stack(tmp_path=None, *, tick_s=0.0, engine_kw=None, **cfg):
+    """engine + async server + session manager + HTTP facade (unstarted)."""
+    engine = SNNServeEngine(NET, QPARAMS, **{"max_batch": 2, **(engine_kw or {})})
+    server = AsyncSNNServer(engine)
+    cfg.setdefault("window", 8)
+    cfg.setdefault("stride", 4)
+    cfg.setdefault("idle_budget", None)
+    manager = StreamSessionManager(
+        engine,
+        checkpoint_dir=None if tmp_path is None else tmp_path / "ck",
+        config=StreamConfig(**cfg),
+    )
+    http = SNNHttpServer(
+        server, streaming=AsyncStreamServer(server, manager), stream_tick_s=tick_s
+    )
+    return engine, server, manager, http
+
+
+async def _post(port, path, body=None, read_all=True):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = b"" if body is None else json.dumps(body).encode()
+    writer.write(
+        f"POST {path} HTTP/1.1\r\nHost: t\r\n"
+        f"Content-Length: {len(payload)}\r\n\r\n".encode() + payload
+    )
+    await writer.drain()
+    if not read_all:
+        return reader, writer
+    data = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    head, _, rest = data.partition(b"\r\n\r\n")
+    return int(head.split()[1]), json.loads(rest) if rest else {}
+
+
+def test_session_roundtrip_readouts_and_subscription():
+    async def main():
+        _, _, manager, http = _stack()
+        await http.start()
+        p = http.port
+        status, s = await _post(p, "/session/open", {"sid": "x", "window": 8,
+                                                     "stride": 4})
+        assert status == 200 and s["session"] == "x" and s["state"] == "live"
+
+        # long-lived NDJSON subscription on its own connection
+        reader, writer = await _post(p, "/session/stream", {"session": "x"},
+                                     read_all=False)
+        assert b"200" in await reader.readline()
+        while (await reader.readline()) not in (b"\r\n", b"\n"):
+            pass
+
+        status, out = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(10).tolist()}
+        )
+        assert status == 200 and out["t_total"] == 10
+        assert [r["t_end"] for r in out["readouts"]] == [4, 8]
+        for r in out["readouts"]:
+            assert len(r["spike_counts"]) == NET.n_classes
+            assert r["prediction"] == int(np.argmax(r["spike_counts"]))
+
+        # the subscriber saw the same readouts, in order
+        lines = [json.loads(await reader.readline()) for _ in range(2)]
+        assert [l["t_end"] for l in lines] == [4, 8]
+
+        status, summary = await _post(p, "/session/close", {"session": "x"})
+        assert status == 200 and summary["state"] == "closed"
+        assert summary["t_total"] == 10 and summary["chunks"] >= 1
+        final = json.loads(await reader.readline())
+        assert final["state"] == "closed"  # end-of-stream summary line
+        assert await reader.readline() == b""  # then the stream closes
+        writer.close()
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_mid_feed_disconnect_leaves_session_resumable():
+    async def main():
+        engine, _, manager, http = _stack(engine_kw={"tick_stride": 1})
+        await http.start()
+        p = http.port
+        await _post(p, "/session/open", {"sid": "x"})
+        # fire a feed and vanish before the response arrives
+        reader, writer = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(12).tolist()},
+            read_all=False,
+        )
+        writer.close()
+        await writer.wait_closed()
+        # the chunk still serves to completion: carry lands, readouts queue
+        for _ in range(2000):
+            s = manager.sessions["x"]
+            if s.drained and s.t_total == 12:
+                break
+            await asyncio.sleep(0.005)
+        assert manager.sessions["x"].t_total == 12
+        assert manager.sessions["x"].carry is not None
+        assert engine.free_lanes == engine.max_batch
+        # the disconnected feed's readouts were produced (delivered to any
+        # /session/stream subscriber); only the dead response lost its copy
+        assert manager.sessions["x"].n_readouts == 3  # t_end 4, 8, 12
+        # and the session keeps serving from a fresh connection, carry intact
+        status, out = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(4, seed=1).tolist()}
+        )
+        assert status == 200 and out["t_total"] == 16
+        assert [r["t_end"] for r in out["readouts"]] == [16]
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_double_close_and_feed_after_close_are_clean_4xx():
+    async def main():
+        _, _, _, http = _stack()
+        await http.start()
+        p = http.port
+        await _post(p, "/session/open", {"sid": "x"})
+        status, _ = await _post(p, "/session/close", {"session": "x"})
+        assert status == 200
+        status, err = await _post(p, "/session/close", {"session": "x"})
+        assert status == 409 and "closed" in err["error"]
+        status, err = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(2).tolist()}
+        )
+        assert status == 409 and "closed" in err["error"]
+        status, err = await _post(
+            p, "/session/feed", {"session": "ghost", "chunk": _raster(2).tolist()}
+        )
+        assert status == 404 and "unknown session" in err["error"]
+        status, err = await _post(p, "/session/close", {"session": "ghost"})
+        assert status == 404
+        # malformed session bodies are 400s, and the server survives them
+        await _post(p, "/session/open", {"sid": "y"})
+        status, err = await _post(p, "/session/feed", {"session": "y"})
+        assert status == 400 and "chunk" in err["error"]
+        status, err = await _post(
+            p, "/session/feed", {"session": "y", "chunk": [[1, 2], [3, 4]]}
+        )
+        assert status == 400  # wrong channel count
+        status, err = await _post(p, "/session/open", {"sid": "y"})
+        assert status == 400 and "already exists" in err["error"]
+        # back-pressure: a chunk that would overflow the buffer answers 429
+        await _post(p, "/session/open", {"sid": "z", "max_pending_steps": 4})
+        status, err = await _post(
+            p, "/session/feed", {"session": "z", "chunk": _raster(8).tolist()}
+        )
+        assert status == 429 and "pending buffer full" in err["error"]
+        # nothing was partially absorbed by the refused feed
+        status, out = await _post(
+            p, "/session/feed", {"session": "z", "chunk": _raster(4).tolist()}
+        )
+        assert status == 200 and out["t_total"] == 4
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_engine_stall_fails_feed_with_stalled_error():
+    async def main():
+        engine, server, manager, http = _stack(
+            engine_kw={"max_batch": 1, "max_idle_ticks": 3}
+        )
+
+        class Wedged(Scheduler):
+            def pop(self):
+                return None
+
+        engine.sched = Wedged()
+        await http.start()
+        p = http.port
+        await _post(p, "/session/open", {"sid": "x"})
+        status, err = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(6).tolist()}
+        )
+        assert status == 500 and "stalled" in err["error"].lower()
+        assert isinstance(server.error, EngineStalledError)
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_corrupted_checkpoint_rejected_with_clear_error(tmp_path):
+    async def main():
+        _, _, manager, http = _stack(tmp_path)
+        await http.start()
+        p = http.port
+        await _post(p, "/session/open", {"sid": "x"})
+        status, _ = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(9).tolist()}
+        )
+        assert status == 200
+        manager.evict("x")
+        assert manager.sessions["x"].state == "evicted"
+
+        # flip bytes in the on-disk carry: the CRC gate must refuse it
+        npz = next(pathlib.Path(tmp_path / "ck" / "x").glob("step_*/arrays.npz"))
+        blob = bytearray(npz.read_bytes())
+        blob[len(blob) // 2] ^= 0xFF
+        npz.write_bytes(bytes(blob))
+
+        status, err = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(3).tolist()}
+        )
+        assert status == 500
+        assert "x" in err["error"] and "restore" in err["error"]
+        # the session was not half-restored into garbage state
+        assert manager.sessions["x"].state == "evicted"
+        assert manager.sessions["x"].carry is None
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_idle_ticker_evicts_and_feed_restores(tmp_path):
+    async def main():
+        _, _, manager, http = _stack(tmp_path, tick_s=0.01, idle_budget=2)
+        await http.start()
+        p = http.port
+        await _post(p, "/session/open", {"sid": "x"})
+        status, out = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(9).tolist()}
+        )
+        assert status == 200
+        for _ in range(500):
+            if manager.sessions["x"].state == "evicted":
+                break
+            await asyncio.sleep(0.01)
+        assert manager.sessions["x"].state == "evicted"
+        assert manager.metrics.counters["sessions_evicted"] == 1
+        # the next feed restores bit-exactly and keeps counting readouts
+        status, out = await _post(
+            p, "/session/feed", {"session": "x", "chunk": _raster(3, seed=2).tolist()}
+        )
+        assert status == 200 and out["state"] == "live"
+        assert out["t_total"] == 12 and [r["t_end"] for r in out["readouts"]] == [12]
+        assert manager.sessions["x"].n_restores == 1
+        snap = manager.metrics.snapshot()
+        assert snap["streaming"]["resumes"] == 1
+        assert snap["streaming"]["live_sessions"] == 1
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_session_routes_404_when_streaming_disabled():
+    async def main():
+        engine = SNNServeEngine(NET, QPARAMS, max_batch=2)
+        http = SNNHttpServer(AsyncSNNServer(engine))  # no streaming facade
+        await http.start()
+        status, err = await _post(http.port, "/session/open", {"sid": "x"})
+        assert status == 404 and "not enabled" in err["error"]
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_prometheus_exposes_stream_series():
+    async def main():
+        _, _, manager, http = _stack()
+        await http.start()
+        manager.open("x")
+        text = manager.metrics.prometheus_text()
+        assert 'neura_stream_sessions{state="live"} 1' in text
+        assert 'neura_stream_events_total{event="sessions_opened"} 1' in text
+        assert "neura_stream_readout_latency_seconds" in text
+        await http.stop()
+
+    asyncio.run(main())
+
+
+def test_feed_shape_validation():
+    engine = SNNServeEngine(NET, QPARAMS, max_batch=2)
+    manager = StreamSessionManager(engine)
+    manager.open("x")
+    with pytest.raises(ValueError, match="steps"):
+        manager.feed("x", np.zeros((3, NET.n_in + 1), np.int64))
+    with pytest.raises(ValueError, match="empty"):
+        manager.feed("x", np.zeros((0, NET.n_in), np.int64))

@@ -1,0 +1,289 @@
+"""Seam-exactness battery: any chunking of a stream == the unchunked run.
+
+The streaming-session invariant under test: feeding a raster to a
+:class:`~repro.serve.streaming.StreamSession` in *any* chunk schedule --
+1-step chunks, chunks straddling the engine's power-of-two program
+boundaries, everything in between -- produces sliding-window readouts
+bit-identical to serving the concatenated stream, and bit-identical to a
+serial ``run_int``.  The serial cross-check uses prefix runs: by
+causality, ``run_int(raster[:b])`` from fresh state accumulates exactly
+the stream's first ``b`` steps of output spikes, so every window
+``[a, b)`` must equal the prefix-count difference -- an oracle that never
+touches the carry seams it is checking.
+
+Covered across every neuron x topology x reset combination (including
+synaptic state and both recurrent topologies, whose carries hold more
+than a membrane), plus the eviction seam: checkpoint -> evict -> restore
+-> continue must be indistinguishable from a never-evicted session.
+
+Deterministic schedule batteries run always; hypothesis drives random
+schedules where it is installed (CI), skipping cleanly elsewhere.
+"""
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+    run_int,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel, ResetMode, Topology
+from repro.serve.snn_engine import SNNServeEngine
+from repro.serve.streaming import (
+    SessionClosedError,
+    StreamConfig,
+    StreamOverflowError,
+    StreamSessionManager,
+    UnknownSessionError,
+)
+
+COMBOS = [
+    pytest.param(Topology.FF, NeuronModel.LIF, ResetMode.SUBTRACT, id="ff-lif-sub"),
+    pytest.param(Topology.FF, NeuronModel.IF, ResetMode.ZERO, id="ff-if-zero"),
+    pytest.param(Topology.FF, NeuronModel.SYNAPTIC, ResetMode.SUBTRACT,
+                 id="ff-syn-sub"),
+    pytest.param(Topology.ATA_F, NeuronModel.LIF, ResetMode.ZERO, id="ataf-lif-zero"),
+    pytest.param(Topology.ATA_T, NeuronModel.LIF, ResetMode.SUBTRACT,
+                 id="atat-lif-sub"),
+    pytest.param(Topology.ATA_T, NeuronModel.SYNAPTIC, ResetMode.ZERO,
+                 id="atat-syn-zero"),
+]
+
+
+def _net(topology, neuron, reset, n_in=18, T=8):
+    return NetworkConfig(
+        layers=(
+            LayerConfig(n_in=n_in, n_out=10, neuron=neuron, topology=topology,
+                        reset=reset, beta=0.9),
+            LayerConfig(n_in=10, n_out=4, neuron=neuron, reset=reset, beta=0.77),
+        ),
+        n_steps=T,
+    )
+
+
+def _quantized(net, seed=0):
+    qparams, _ = quantize_params(net, init_float_params(jax.random.PRNGKey(seed), net))
+    return qparams
+
+
+def _raster(net, T, seed=1, rate=0.3):
+    rng = np.random.default_rng(seed)
+    return (rng.random((T, net.n_in)) < rate).astype(np.int64)
+
+
+def _prefix_counts(net, qparams, raster, b, cache={}):
+    """Serial oracle: run_int on the first b steps == cumulative counts."""
+    key = (id(qparams), raster.tobytes()[:64], raster.shape[0], b)
+    if key not in cache:
+        if b == 0:
+            cache[key] = np.zeros(net.n_classes, np.int64)
+        else:
+            rec = run_int(net, qparams, jnp.asarray(raster[:b, None, :], jnp.int32))
+            cache[key] = np.asarray(rec.spike_counts)[0].astype(np.int64)
+    return cache[key]
+
+
+def _manager(net, qparams, ckpt=None, window=12, stride=5, max_batch=3, **cfg):
+    engine = SNNServeEngine(net, qparams, max_batch=max_batch, tick_stride=8)
+    return StreamSessionManager(
+        engine,
+        checkpoint_dir=ckpt,
+        config=StreamConfig(window=window, stride=stride, idle_budget=None, **cfg),
+    )
+
+
+def _run_chunked(mgr, sid, raster, edges, evict_after=()):
+    """Feed raster[edges[i]:edges[i+1]] chunk by chunk; evict (and let the
+    next feed restore) after the chunk indices in ``evict_after``."""
+    s = mgr.sessions.get(sid) or mgr.open(sid)
+    for i in range(len(edges) - 1):
+        mgr.feed(sid, raster[edges[i]:edges[i + 1]])
+        mgr.pump()
+        if i in evict_after:
+            mgr.evict(sid)
+            assert s.state == "evicted"
+    return mgr.drain_readouts(sid), s
+
+
+def _assert_readouts_serial(net, qparams, raster, readouts, window, stride, T):
+    expected_ends = list(range(stride, T + 1, stride))
+    assert [r.t_end for r in readouts] == expected_ends
+    for r in readouts:
+        start = max(0, r.t_end - window)
+        want = _prefix_counts(net, qparams, raster, r.t_end) - _prefix_counts(
+            net, qparams, raster, start
+        )
+        np.testing.assert_array_equal(r.spike_counts, want)
+        assert r.window == r.t_end - start
+        assert r.prediction == int(np.argmax(want))
+
+
+# ---------------------------------------------------------------------------
+# deterministic schedule battery: every state-carrying combo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology,neuron,reset", COMBOS)
+def test_chunked_matches_serial_every_combo(topology, neuron, reset):
+    """1-step chunks, pow2-straddling chunks, ragged chunks: all schedules
+    of the same stream produce identical, serial-exact readouts."""
+    net = _net(topology, neuron, reset)
+    qparams = _quantized(net)
+    T = 26
+    raster = _raster(net, T)
+    window, stride = 12, 5
+    schedules = [
+        [0, T],  # one shot
+        list(range(T + 1)),  # 1-step chunks: the worst case
+        [0, 3, 4, 11, 16, 17, 26],  # ragged, crossing pow2 boundaries
+        [0, 7, 9, 26],  # chunk > tick_stride cap: split across ticks
+    ]
+    results = []
+    for edges in schedules:
+        mgr = _manager(net, qparams, window=window, stride=stride)
+        readouts, _ = _run_chunked(mgr, "s", raster, edges)
+        _assert_readouts_serial(net, qparams, raster, readouts, window, stride, T)
+        results.append([r.spike_counts for r in readouts])
+    for other in results[1:]:
+        for a, b in zip(results[0], other):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize(
+    "topology,neuron,reset",
+    [COMBOS[2], COMBOS[4]],  # synaptic + dense-recurrent: the richest carries
+)
+def test_evict_restore_continue_matches_never_evicted(
+    topology, neuron, reset, tmp_path
+):
+    """checkpoint -> evict -> restore -> continue == never evicted."""
+    net = _net(topology, neuron, reset)
+    qparams = _quantized(net)
+    T = 24
+    raster = _raster(net, T, seed=5)
+    edges = [0, 5, 9, 14, 20, 24]
+
+    mgr_plain = _manager(net, qparams)
+    base, _ = _run_chunked(mgr_plain, "s", raster, edges)
+
+    mgr_evict = _manager(net, qparams, ckpt=tmp_path / "ck")
+    churned, s = _run_chunked(mgr_evict, "s", raster, edges, evict_after={0, 2, 3})
+    assert s.n_evictions == 3 and s.n_restores == 3
+
+    assert [r.t_end for r in churned] == [r.t_end for r in base]
+    for a, b in zip(churned, base):
+        np.testing.assert_array_equal(a.spike_counts, b.spike_counts)
+    _assert_readouts_serial(net, qparams, raster, churned, 12, 5, T)
+
+
+def test_concurrent_sessions_no_carry_cross_talk():
+    """Interleaved sessions with different inputs each stay serial-exact:
+    lane reassignment between chunks never leaks one stream's carry into
+    another."""
+    net = _net(Topology.ATA_T, NeuronModel.SYNAPTIC, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    T = 20
+    rasters = {f"s{i}": _raster(net, T, seed=10 + i) for i in range(4)}
+    mgr = _manager(net, qparams, max_batch=2)  # fewer lanes than sessions
+    for sid in rasters:
+        mgr.open(sid)
+    edges = [0, 3, 8, 9, 15, 20]
+    for i in range(len(edges) - 1):
+        for sid in rasters:  # interleave: every session feeds every round
+            mgr.feed(sid, rasters[sid][edges[i]:edges[i + 1]])
+        mgr.pump()
+    for sid, raster in rasters.items():
+        readouts = mgr.drain_readouts(sid)
+        _assert_readouts_serial(net, qparams, raster, readouts, 12, 5, T)
+
+
+def test_lifecycle_errors_and_conservation():
+    net = _net(Topology.FF, NeuronModel.LIF, ResetMode.SUBTRACT)
+    qparams = _quantized(net)
+    mgr = _manager(net, qparams)
+    raster = _raster(net, 8)
+
+    with pytest.raises(UnknownSessionError):
+        mgr.feed("ghost", raster)
+    with pytest.raises(UnknownSessionError):
+        mgr.close("ghost")
+
+    s = mgr.open("a", max_pending_steps=4)
+    with pytest.raises(StreamOverflowError):
+        mgr.feed("a", raster)  # 8 > 4: refused atomically
+    assert s.pending_steps == 0
+    mgr.feed("a", raster[:3])
+    mgr.pump()
+    assert mgr.close("a")["state"] == "closed"
+    with pytest.raises(SessionClosedError):
+        mgr.feed("a", raster[:1])
+    with pytest.raises(SessionClosedError):
+        mgr.close("a")
+    assert mgr.conservation() == {"opened": 1, "live": 0, "evicted": 0, "closed": 1}
+
+    with pytest.raises(ValueError):
+        StreamConfig(window=0)
+    with pytest.raises(ValueError):
+        StreamConfig(stride=0)
+    with pytest.raises(ValueError):
+        mgr.open("b", window=-1)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random chunk schedules (CI; only this test skips when the
+# dependency is absent -- the deterministic battery above always runs)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis is a CI-only dependency (requirements-dev)
+    HAVE_HYPOTHESIS = False
+
+_T_H = 22
+
+if HAVE_HYPOTHESIS:
+    _NET_H = _net(Topology.ATA_T, NeuronModel.SYNAPTIC, ResetMode.SUBTRACT)
+    _QPARAMS_H = _quantized(_NET_H)
+    _RASTER_H = _raster(_NET_H, _T_H, seed=42)
+    _MGRS: list = []  # one engine per process; hypothesis examples reuse it
+
+    def _mgr_h():
+        if not _MGRS:
+            _MGRS.append(_manager(_NET_H, _QPARAMS_H, window=9, stride=4))
+        return _MGRS[0]
+
+    @given(
+        cuts=st.lists(st.integers(1, _T_H - 1), max_size=8, unique=True),
+        sid=st.integers(0, 1 << 30),
+    )
+    @settings(
+        max_examples=15,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_random_chunk_schedules_serial_exact(cuts, sid):
+        """Any cut set of the stream -- including empty (one shot) and
+        dense (near-1-step chunks) -- reproduces the serial prefix-count
+        oracle."""
+        edges = [0] + sorted(cuts) + [_T_H]
+        mgr = _mgr_h()
+        name = f"h{sid}-{len(mgr.sessions)}"
+        readouts, _ = _run_chunked(mgr, name, _RASTER_H, edges)
+        _assert_readouts_serial(
+            _NET_H, _QPARAMS_H, _RASTER_H, readouts, 9, 4, _T_H
+        )
+        mgr.close(name)
+
+else:  # pragma: no cover - visible skip in environments without hypothesis
+
+    @pytest.mark.skip(reason="hypothesis not installed (CI-only dependency)")
+    def test_random_chunk_schedules_serial_exact():
+        pass
