@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
 from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
+from repro.serve.journal import Journal, recover
 from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy
 from repro.serve.snn_engine import SNNRequest, SNNServeEngine
 from repro.serve.streaming import StreamConfig, StreamSessionManager
@@ -373,6 +374,68 @@ def run(fast: bool = False):
         f"steps_per_sec={entry['steps_per_sec']:.0f}"
         f";evictions={entry['evictions']};restores={entry['restores']}",
     ))
+
+    # recovery: the cost of crash safety.  (a) journal overhead -- the same
+    # closed-loop pass with every admission/completion written through the
+    # WAL (fsync-batched), gated as absolute samples/sec; (b) replay cost --
+    # recover() + apply() over synthetic WALs of growing length, gated as
+    # records/sec so a recovery-path slowdown trips the same gate the serve
+    # paths use.
+    report["recovery"] = {"journal_overhead": {}, "replay": {}}
+    plain_sps = n / best_engine[mb_load]
+    with tempfile.TemporaryDirectory(prefix="neura-bench-wal-") as tmp:
+        jeng = SNNServeEngine(net, qparams, max_batch=mb_load)
+        jeng.warmup(T)
+        jeng.journal = Journal(pathlib.Path(tmp) / "wal", fsync_every=16)
+        jeng.run(_requests(rasters[:4]))
+        best_journaled = float("inf")
+        for _ in range(repeats):
+            reqs = _requests(rasters)
+            t0 = time.perf_counter()
+            jeng.run(reqs)
+            best_journaled = min(best_journaled, time.perf_counter() - t0)
+        jeng.journal.close()
+        journaled_sps = n / best_journaled
+        report["recovery"]["journal_overhead"] = {
+            "journaled_samples_per_sec": journaled_sps,
+            "plain_samples_per_sec": plain_sps,
+            "overhead_fraction": max(0.0, 1.0 - journaled_sps / plain_sps),
+        }
+        rows.append((
+            f"serve/journal-batch{mb_load}",
+            best_journaled * 1e6,
+            f"journaled_samples_per_sec={journaled_sps:.1f}"
+            f";overhead={report['recovery']['journal_overhead']['overhead_fraction'] * 100:.1f}%",
+        ))
+
+    wal_lengths = (256, 1024, 4096) if not fast else (64, 256)
+    for k in wal_lengths:
+        with tempfile.TemporaryDirectory(prefix="neura-bench-wal-") as tmp:
+            with Journal(tmp, fsync_every=64) as j:
+                for i in range(k // 2):  # half the admissions completed
+                    j.append("submit", arrays={"raster": rasters[i % n]},
+                             uid=i, priority=1, tenant="default", deadline_s=None)
+                    if i % 2 == 0:
+                        j.append("done", uid=i, status="completed")
+            n_records = k // 2 + (k // 2 + 1) // 2
+            t0 = time.perf_counter()
+            state = recover(tmp)
+            fresh = SNNServeEngine(net, qparams, max_batch=mb_load)
+            summary = state.apply(fresh)
+            wall = time.perf_counter() - t0
+        entry = {
+            "wal_records": n_records,
+            "outstanding_requests": summary["requests_resubmitted"],
+            "recovery_s": wall,
+            "replay_records_per_sec": n_records / wall,
+        }
+        report["recovery"]["replay"][str(n_records)] = entry
+        rows.append((
+            f"serve/recover-wal{n_records}",
+            wall * 1e6,
+            f"replay_records_per_sec={entry['replay_records_per_sec']:.0f}"
+            f";resubmitted={entry['outstanding_requests']}",
+        ))
 
     out = FAST_OUT if fast else OUT
     out.parent.mkdir(exist_ok=True)

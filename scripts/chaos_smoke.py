@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Chaos smoke: one seeded fault schedule through the supervised engine.
+
+A fast (seconds) end-to-end sanity pass for CI's tier-1 leg: a fixed
+fault schedule -- a tick exception, a carry poisoning, and a simulated
+process kill -- fires against a :class:`SupervisedEngine` with a
+write-ahead journal, and every admitted request must come back
+bit-identical to a serial ``run_int``.  The full deterministic battery
+is ``tests/test_chaos.py``; the randomized churn is the nightly
+``tests/test_chaos_soak.py``.  This script exists so the chaos path has
+a one-command reproduction outside pytest:
+
+    PYTHONPATH=src python scripts/chaos_smoke.py [--seed N]
+
+Exit code 0 on success; 1 with a diagnostic on any lost, double-served,
+or bit-inexact request.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+    run_int,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel
+from repro.serve.faults import FaultInjector
+from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+from repro.serve.supervisor import SupervisedEngine
+
+NET = NetworkConfig(
+    layers=(
+        LayerConfig(n_in=16, n_out=10, neuron=NeuronModel.LIF, beta=0.9),
+        LayerConfig(n_in=10, n_out=4, neuron=NeuronModel.LIF, beta=0.77),
+    ),
+    n_steps=8,
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+
+    params = init_float_params(jax.random.PRNGKey(args.seed), NET)
+    qparams, _ = quantize_params(NET, params)
+    inj = FaultInjector().arm("tick", at=1).arm("carry", at=2, bit=26).arm("kill", at=4)
+    sup = SupervisedEngine(
+        lambda: SNNServeEngine(NET, qparams, max_batch=4, tick_stride=2),
+        journal_dir=tempfile.mkdtemp(prefix="neura-chaos-wal-"),
+        journal_fsync_every=1,
+        faults=inj,
+        backoff_s=1e-4,
+    )
+    rng = np.random.default_rng(args.seed)
+    rasters = {
+        uid: (rng.random((8, NET.n_in)) < 0.4).astype(np.uint8) for uid in range(args.requests)
+    }
+    for uid, raster in rasters.items():
+        sup.submit(SNNRequest(uid=uid, raster=raster))
+
+    completed: dict[int, SNNRequest] = {}
+    while sup.in_flight:
+        for req in sup.poll():
+            if req.uid in completed:
+                print(f"FAIL: uid {req.uid} double-served", file=sys.stderr)
+                return 1
+            completed[req.uid] = req
+    missing = set(rasters) - set(completed)
+    if missing:
+        print(f"FAIL: requests lost: {sorted(missing)}", file=sys.stderr)
+        return 1
+    for uid, req in completed.items():
+        batch = jnp.asarray(rasters[uid][:, None, :], jnp.int32)
+        serial = np.asarray(run_int(NET, qparams, batch).spike_counts)[0]
+        if not np.array_equal(req.spike_counts, serial):
+            print(
+                f"FAIL: uid {uid} not bit-exact vs run_int "
+                f"({req.spike_counts} != {serial})",
+                file=sys.stderr,
+            )
+            return 1
+    sup.close()
+    m = sup.metrics.counters
+    print(
+        f"chaos smoke OK: {len(completed)} requests bit-exact through "
+        f"{len(inj.fired)} injected faults "
+        f"(retries={m['tick_retries']}, quarantined={m['quarantined_lanes']}, "
+        f"warm={m['recoveries_warm']}, cold={m['recoveries_cold']})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,11 +62,26 @@ def latest_step(root: str | pathlib.Path) -> int | None:
     return int(f.read_text().strip())
 
 
+def _fsync_path(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class Checkpointer:
-    def __init__(self, root: str | pathlib.Path, keep: int = 3):
+    """``faults`` threads the chaos injector's ``checkpoint`` site between
+    the commit's file writes (``repro.serve.faults``): a fire there is a
+    torn write, which the atomic commit protocol must keep invisible --
+    the half-written ``.tmp`` directory is never renamed, so readers only
+    ever see whole, fsynced checkpoints."""
+
+    def __init__(self, root: str | pathlib.Path, keep: int = 3, faults=None):
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.faults = faults
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
@@ -90,26 +105,38 @@ class Checkpointer:
         }
 
         def commit():
+            # Atomic write-tmp -> fsync -> rename: every file's *contents*
+            # are fsynced (not just the directory entries -- a torn write
+            # must be impossible, not merely CRC-detectable), then the tmp
+            # directory's entries, and only then does the rename publish
+            # the step.  A crash at any point leaves either the previous
+            # checkpoint or a stray .tmp that restore never looks at.
             try:
                 tmp = self.root / f"step_{step:08d}.tmp"
                 final = self.root / f"step_{step:08d}"
                 tmp.mkdir(parents=True, exist_ok=True)
                 np.savez(tmp / "arrays.npz", **flat)
+                _fsync_path(tmp / "arrays.npz")
+                if self.faults is not None:
+                    self.faults.on_checkpoint_write()  # chaos: torn write
                 (tmp / "manifest.json").write_text(json.dumps(manifest))
-                # fsync the directory entries before the atomic rename
-                fd = os.open(tmp, os.O_RDONLY)
-                os.fsync(fd)
-                os.close(fd)
+                _fsync_path(tmp / "manifest.json")
+                _fsync_path(tmp)
                 if final.exists():
                     import shutil
 
                     shutil.rmtree(final)
                 os.rename(tmp, final)
+                _fsync_path(self.root)  # the rename itself must survive
                 latest = self.root / "LATEST.tmp"
                 latest.write_text(str(step))
+                _fsync_path(latest)
                 os.replace(latest, self.root / "LATEST")
                 self._gc()
-            except BaseException as e:  # surfaced on next wait()
+            except Exception as e:  # surfaced on next wait()
+                # BaseException (a SimulatedKill / real interpreter
+                # shutdown) propagates: a killed process cannot stash its
+                # own failure for later
                 self._error = e
 
         if blocking:

@@ -45,6 +45,9 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import signal
+import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -53,6 +56,7 @@ from repro.core.network import NetworkConfig, init_float_params, quantize_params
 from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
 from repro.serve.http import SNNHttpServer
+from repro.serve.journal import Journal, recover
 from repro.serve.scheduler import PrecisionTier, Priority, SchedPolicy
 from repro.serve.snn_engine import AsyncSNNServer, SNNRequest, SNNServeEngine
 from repro.serve.streaming import (
@@ -60,6 +64,38 @@ from repro.serve.streaming import (
     StreamConfig,
     StreamSessionManager,
 )
+
+
+class _DrainRequested(BaseException):
+    """Raised from the signal handler to unwind into the drain path.
+
+    BaseException so the engine's ``except Exception`` nets cannot swallow
+    the shutdown request mid-tick."""
+
+
+def _install_drain_handlers(engine) -> None:
+    """SIGTERM/SIGINT stop admission and unwind to a graceful drain.
+
+    The first signal sets ``engine.stop_admission`` and raises
+    :class:`_DrainRequested`; a second signal while draining force-quits
+    with the conventional 130 status."""
+
+    def _handler(signum, frame):
+        if engine.stop_admission:
+            raise SystemExit(130)
+        engine.stop_admission = True
+        name = signal.Signals(signum).name
+        print(f"\n[serve_snn] caught {name}: draining in-flight work "
+              "(signal again to force-quit)", flush=True)
+        raise _DrainRequested()
+
+    signal.signal(signal.SIGINT, _handler)
+    signal.signal(signal.SIGTERM, _handler)
+
+
+def _close_journal(engine) -> None:
+    if engine.journal is not None:
+        engine.journal.close()
 
 
 def _build_net(hidden: int, T: int) -> NetworkConfig:
@@ -73,10 +109,9 @@ def _build_net(hidden: int, T: int) -> NetworkConfig:
     )
 
 
-def _run_streaming(args, net, engine) -> None:
+def _run_streaming(args, net, engine, apply_recovery=None) -> None:
     """Synthetic multi-stream replay: N sessions, random chunk sizes and
     interleavings, optional idle-eviction churn through the checkpointer."""
-    import tempfile
     import time
 
     rng = np.random.default_rng(args.seed)
@@ -96,23 +131,40 @@ def _run_streaming(args, net, engine) -> None:
     # warmup resets pool + metrics: run it before any session bookkeeping
     engine.warmup(max(2 * args.stream_chunk, 8),
                   compilation_cache_dir=args.compile_cache)
+    if apply_recovery is not None:
+        apply_recovery(manager)
     remaining = {}
     for i in range(args.streaming):
         s = manager.open(f"stream{i}")
         remaining[s.sid] = args.stream_steps
 
     t0 = time.perf_counter()
-    while any(remaining.values()) or not all(
-        s.drained for s in manager.sessions.values()
-    ):
-        for sid, left in remaining.items():
-            # random interleaving: each poll round, each stream may feed
-            if left and rng.random() < 0.5:
-                n = int(min(left, max(1, rng.poisson(args.stream_chunk))))
-                chunk = (rng.random((n, net.n_in)) < density).astype(np.uint8)
-                manager.feed(sid, chunk)
-                remaining[sid] = left - n
-        manager.poll()
+    try:
+        while any(remaining.values()) or not all(
+            s.drained for s in manager.sessions.values()
+        ):
+            for sid, left in remaining.items():
+                # random interleaving: each poll round, each stream may feed
+                if left and rng.random() < 0.5:
+                    n = int(min(left, max(1, rng.poisson(args.stream_chunk))))
+                    chunk = (rng.random((n, net.n_in)) < density).astype(np.uint8)
+                    manager.feed(sid, chunk)
+                    remaining[sid] = left - n
+            manager.poll()
+    except _DrainRequested:
+        # graceful drain: stop feeding, finish what each lane holds, evict
+        # to the checkpoint store when one exists, flush the journal
+        while not all(s.drained for s in manager.sessions.values()):
+            manager.poll()
+        n_sessions = len(manager.sessions)
+        if ckpt is not None:
+            for sid in list(manager.sessions):
+                manager.evict(sid)
+        _close_journal(engine)
+        n_left = sum(remaining.values())
+        print(f"[serve_snn] drained {n_sessions} session(s) "
+              f"({n_left} unfed steps abandoned); exiting cleanly")
+        sys.exit(0)
     span = time.perf_counter() - t0
 
     snap = engine.metrics.snapshot()
@@ -145,6 +197,7 @@ def _run_streaming(args, net, engine) -> None:
             f"  {sid}: t_total={s.t_total} chunks={s.n_chunks} "
             f"readouts={s.n_readouts} evictions={s.n_evictions}"
         )
+    _close_journal(engine)
 
 
 def main():
@@ -198,6 +251,12 @@ def main():
     ap.add_argument("--stream-ckpt", default=None, metavar="DIR",
                     help="checkpoint directory for evicted session carries "
                     "(default: a temp dir when --stream-idle is set)")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="write-ahead journal directory (default: a temp "
+                    "dir); outstanding work found there is recovered and "
+                    "re-served before the new workload")
+    ap.add_argument("--no-journal", action="store_true",
+                    help="disable the write-ahead journal entirely")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -225,6 +284,36 @@ def main():
         precision_tiers=tiers,
     )
 
+    recovered = None
+    if not args.no_journal:
+        journal_dir = args.journal or tempfile.mkdtemp(prefix="neura-journal-")
+        # opening repairs any torn tail from a previous crash before the
+        # first append of this run
+        engine.journal = Journal(journal_dir)
+        print(f"journaling to {journal_dir}")
+        recovered = recover(journal_dir, checkpoint_dir=args.stream_ckpt)
+
+    def _apply_recovery(manager=None):
+        # outstanding work from a crashed run: resubmit/re-feed it ahead
+        # of this run's workload.  Must run after warmup (which requires
+        # an idle engine), hence the deferred call sites per mode.
+        if recovered is None or not (recovered.requests or recovered.sessions):
+            return
+        mgr = manager
+        if recovered.sessions and mgr is None:
+            mgr = StreamSessionManager(
+                engine,
+                checkpoint_dir=args.stream_ckpt,
+                config=StreamConfig(
+                    window=args.stream_window, stride=args.stream_stride
+                ),
+            )
+        summary = recovered.apply(engine, mgr)
+        print(f"recovered from journal: {summary}")
+        return mgr
+
+    _install_drain_handlers(engine)
+
     if args.http is not None:
         engine.warmup(args.T, compilation_cache_dir=args.compile_cache)
 
@@ -245,18 +334,48 @@ def main():
                 streaming=AsyncStreamServer(async_server, manager),
             )
             await server.start()
+            _apply_recovery(manager)
+            # asyncio-native handlers replace the sync drain handlers: a
+            # signal sets the stop event, the loop below drains and exits 0
+            stop = asyncio.Event()
+            loop = asyncio.get_running_loop()
+            for sig in (signal.SIGINT, signal.SIGTERM):
+                loop.add_signal_handler(sig, stop.set)
             print(
                 f"serving on http://{server.host}:{server.port} "
                 "(POST /submit, POST /stream, POST /session/*, "
                 "GET /metrics, GET /healthz)"
             )
-            await server.serve_forever()
+            serve_task = asyncio.create_task(server.serve_forever())
+            stop_task = asyncio.create_task(stop.wait())
+            await asyncio.wait(
+                {serve_task, stop_task}, return_when=asyncio.FIRST_COMPLETED
+            )
+            if serve_task.done() and not stop.is_set():
+                serve_task.result()  # surfaced startup/serve failure
+                return
+            engine.stop_admission = True
+            print("[serve_snn] caught signal: draining before shutdown",
+                  flush=True)
+            serve_task.cancel()
+            try:
+                await serve_task
+            except asyncio.CancelledError:
+                pass
+            await server.stop()
+            while engine.in_flight or any(
+                not s.drained for s in manager.sessions.values()
+            ):
+                manager.poll()
+                await asyncio.sleep(0)
+            _close_journal(engine)
+            print("[serve_snn] drained; exiting cleanly")
 
         asyncio.run(_serve_http())
         return
 
     if args.streaming is not None:
-        _run_streaming(args, net, engine)
+        _run_streaming(args, net, engine, _apply_recovery)
         return
 
     rng = np.random.default_rng(args.seed)
@@ -303,8 +422,28 @@ def main():
     # precompile the chunk programs + the event route so the report
     # reflects steady-state service, not jit compilation
     engine.warmup(args.T, compilation_cache_dir=args.compile_cache)
+    rec_mgr = _apply_recovery()
 
-    done = engine.run(requests)
+    try:
+        done = engine.run(requests)
+        if rec_mgr is not None:
+            # recovered sessions drain through their own manager
+            while not all(s.drained for s in rec_mgr.sessions.values()):
+                rec_mgr.poll()
+    except _DrainRequested:
+        done = engine.drain()
+        if rec_mgr is not None:
+            while not all(s.drained for s in rec_mgr.sessions.values()):
+                rec_mgr.poll()
+        _close_journal(engine)
+        print(f"[serve_snn] drained {len(done)} in-flight request(s); "
+              "exiting cleanly")
+        return
+    if not done:
+        # e.g. --requests 0 against an already-drained journal
+        _close_journal(engine)
+        print(f"served 0 requests on {net.name}; nothing outstanding")
+        return
     lat = np.asarray([r.latency_s for r in done]) * 1e3
     span = max(r._arrival_wall + r.latency_s for r in done) - min(
         r._arrival_wall for r in done
@@ -342,7 +481,12 @@ def main():
             f"{dp.latency_s * 1e3:.2f} ms, {dp.energy_per_image_j * 1e3:.3f} mJ, "
             f"{dp.events_per_image:.0f} events"
         )
+    _close_journal(engine)
 
 
 if __name__ == "__main__":
-    main()
+    try:
+        main()
+    except _DrainRequested:
+        # signal before any workload was in flight: nothing to drain
+        sys.exit(0)

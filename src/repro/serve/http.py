@@ -138,12 +138,17 @@ class SNNHttpServer:
         port: int = 0,
         streaming: AsyncStreamServer | None = None,
         stream_tick_s: float = 0.05,
+        supervisor=None,
     ):
         self.server = server
         self.host = host
         self.port = port
         self.streaming = streaming
         self.stream_tick_s = stream_tick_s
+        # repro.serve.supervisor.SupervisedEngine, when serving runs under
+        # one: /healthz answers 503 + Retry-After while it is recovering,
+        # and its status() rides the health payload
+        self.supervisor = supervisor
         self._srv: asyncio.base_events.Server | None = None
         self._ticker: asyncio.Task | None = None
         self._uid = itertools.count(1_000_000)  # server-assigned uids
@@ -196,7 +201,22 @@ class SNNHttpServer:
                 return
             method, path, body = parsed
             if path == "/healthz" and method == "GET":
-                await self._respond_json(writer, 200, self._health())
+                health = self._health()
+                if health["status"] == "recovering":
+                    # load balancers must stop sending traffic and come
+                    # back after the journal replay, not error the pool
+                    await self._respond_json(
+                        writer,
+                        503,
+                        health,
+                        extra_headers={
+                            "Retry-After": str(
+                                max(1, int(self.supervisor.retry_after_s))
+                            )
+                        },
+                    )
+                else:
+                    await self._respond_json(writer, 200, health)
             elif path == "/metrics" and method == "GET":
                 await self._respond(
                     writer, 200, self.metrics.prometheus_text().encode(),
@@ -259,14 +279,20 @@ class SNNHttpServer:
     # -- endpoint bodies -----------------------------------------------------
     def _health(self) -> dict:
         eng = self.server.engine
-        return {
-            "status": "ok" if self.server.error is None else "stalled",
+        status = "ok" if self.server.error is None else "stalled"
+        out = {
+            "status": status,
             "in_flight": eng.in_flight,
             "active_lanes": eng.active_lanes,
             "free_lanes": eng.free_lanes,
             "queue_depth": len(eng.queue),
             "served": eng.n_served,
         }
+        if self.supervisor is not None:
+            if self.supervisor.recovering:
+                out["status"] = "recovering"
+            out["recovery"] = self.supervisor.status()
+        return out
 
     async def _submit(self, writer, body: bytes) -> None:
         req = parse_request_json(json.loads(body.decode()), next(self._uid))
@@ -365,16 +391,27 @@ class SNNHttpServer:
 
     # -- response plumbing ---------------------------------------------------
     _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found", 409: "Conflict",
-                429: "Too Many Requests", 500: "Internal Server Error"}
+                429: "Too Many Requests", 500: "Internal Server Error",
+                503: "Service Unavailable"}
 
     async def _respond(
-        self, writer, status: int, payload: bytes, ctype: str, best_effort: bool = False
+        self,
+        writer,
+        status: int,
+        payload: bytes,
+        ctype: str,
+        best_effort: bool = False,
+        extra_headers: dict | None = None,
     ) -> None:
         try:
+            extras = "".join(
+                f"{k}: {v}\r\n" for k, v in (extra_headers or {}).items()
+            )
             writer.write(
                 f"HTTP/1.1 {status} {self._REASONS.get(status, '')}\r\n"
                 f"Content-Type: {ctype}\r\n"
                 f"Content-Length: {len(payload)}\r\n"
+                f"{extras}"
                 f"Connection: close\r\n\r\n".encode() + payload
             )
             await writer.drain()
@@ -383,8 +420,18 @@ class SNNHttpServer:
                 raise  # the handler's outer catch counts the disconnect
 
     async def _respond_json(
-        self, writer, status: int, obj: dict, best_effort: bool = False
+        self,
+        writer,
+        status: int,
+        obj: dict,
+        best_effort: bool = False,
+        extra_headers: dict | None = None,
     ) -> None:
         await self._respond(
-            writer, status, json.dumps(obj).encode(), "application/json", best_effort
+            writer,
+            status,
+            json.dumps(obj).encode(),
+            "application/json",
+            best_effort,
+            extra_headers,
         )

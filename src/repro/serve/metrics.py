@@ -96,6 +96,13 @@ class ServeMetrics:
         self.live_sessions = 0  # gauge: open sessions currently resident
         self.evicted_sessions = 0  # gauge: open sessions parked on disk
         self.readout_latency = RollingWindow(window_s, max_samples)  # feed->readout s
+        # -- NeurA-Guard recovery (repro.serve.supervisor) -------------------
+        # gauges set by the supervisor; counters ride self.counters
+        # (recoveries_warm / recoveries_cold / tick_retries / slow_ticks /
+        # quarantined_lanes / quarantine_restarts / requests_resubmitted /
+        # journal_records_replayed)
+        self.recovering = 0  # gauge: 1 while a restart/replay is in progress
+        self.recovery_s = 0.0  # cumulative wall seconds spent recovering
         self._est_step_s: float | None = None
         self.dispatch_s = 0.0  # cumulative host scheduling/bookkeeping wall
         self.tick_s = 0.0  # cumulative jitted-advance wall (incl. readback)
@@ -201,6 +208,16 @@ class ServeMetrics:
                     "window_count": self.readout_latency.count(now),
                 },
             },
+            "recovery": {
+                "recovering": bool(self.recovering),
+                "warm": self.counters["recoveries_warm"],
+                "cold": self.counters["recoveries_cold"],
+                "tick_retries": self.counters["tick_retries"],
+                "slow_ticks": self.counters["slow_ticks"],
+                "quarantined_lanes": self.counters["quarantined_lanes"],
+                "quarantine_restarts": self.counters["quarantine_restarts"],
+                "recovery_s": self.recovery_s,
+            },
             "est_step_s": self._est_step_s,
             "ticks": self.n_ticks,
             "steps": self.n_steps,
@@ -211,25 +228,48 @@ class ServeMetrics:
         }
 
     def prometheus_text(self, now: float | None = None) -> str:
-        """Prometheus exposition-format rendering of :meth:`snapshot`."""
+        """Prometheus exposition-format rendering of :meth:`snapshot`.
+
+        Every family carries its ``# HELP`` and ``# TYPE`` header exactly
+        once, immediately before its samples -- the strict layout the
+        text-format parsers require (and that
+        ``tests/test_metrics_exposition.py`` enforces, so new families
+        cannot silently drift out of format as they accumulate).
+        """
         now = time.perf_counter() if now is None else now
-        lines = ["# TYPE neura_requests_total counter"]
+        lines: list[str] = []
+
+        def family(name: str, ftype: str, help_text: str) -> None:
+            lines.append(f"# HELP {name} {help_text}")
+            lines.append(f"# TYPE {name} {ftype}")
+
+        family("neura_requests_total", "counter", "Requests by terminal outcome.")
         for outcome in ("submitted", "completed", "degraded", "rejected"):
             lines.append(
                 f'neura_requests_total{{outcome="{outcome}"}} {self.counters[outcome]}'
             )
-        lines.append("# TYPE neura_scheduler_events_total counter")
+        family(
+            "neura_scheduler_events_total",
+            "counter",
+            "Control-plane events (preemption, resume, callback/HTTP failures).",
+        )
         for event in ("preempted", "resumed", "callback_failures", "http_disconnects"):
             lines.append(
                 f'neura_scheduler_events_total{{event="{event}"}} {self.counters[event]}'
             )
-        lines.append("# TYPE neura_route_requests_total counter")
+        family(
+            "neura_route_requests_total", "counter", "Served requests by serving route."
+        )
         for key, n in sorted(self.counters.items()):
             if key.startswith("route:"):
                 lines.append(
                     f'neura_route_requests_total{{route="{key[6:]}"}} {n}'
                 )
-        lines.append("# TYPE neura_request_latency_seconds summary")
+        family(
+            "neura_request_latency_seconds",
+            "summary",
+            "Arrival-to-terminal latency quantiles over the rolling window.",
+        )
         for label, window in [("all", self.latency_all)] + [
             (cls.name.lower(), self.latency[cls]) for cls in Priority
         ]:
@@ -238,18 +278,26 @@ class ServeMetrics:
                     f'neura_request_latency_seconds{{class="{label}",quantile="{q}"}} '
                     f"{window.percentile(q * 100, now):.6g}"
                 )
-        lines.append("# TYPE neura_queue_depth gauge")
+        family("neura_queue_depth", "gauge", "Scheduler queue depth at the last tick.")
         cur = self.queue_depth.values(now)
         lines.append(f"neura_queue_depth {cur[-1] if cur else 0:g}")
-        lines.append("# TYPE neura_lane_occupancy gauge")
+        family(
+            "neura_lane_occupancy", "gauge", "Active fraction of the lane pool (0..1)."
+        )
         occ = self.lane_occupancy.values(now)
         lines.append(f"neura_lane_occupancy {occ[-1] if occ else 0:.6g}")
-        lines.append("# TYPE neura_event_route_hit_rate gauge")
+        family(
+            "neura_event_route_hit_rate",
+            "gauge",
+            "Fraction of served requests that took an event-* route.",
+        )
         lines.append(f"neura_event_route_hit_rate {self.event_route_hit_rate():.6g}")
-        lines.append("# TYPE neura_stream_sessions gauge")
+        family("neura_stream_sessions", "gauge", "Open streaming sessions by residence.")
         lines.append(f'neura_stream_sessions{{state="live"}} {self.live_sessions}')
         lines.append(f'neura_stream_sessions{{state="evicted"}} {self.evicted_sessions}')
-        lines.append("# TYPE neura_stream_events_total counter")
+        family(
+            "neura_stream_events_total", "counter", "Streaming-session lifecycle events."
+        )
         for event in (
             "sessions_opened",
             "sessions_closed",
@@ -261,18 +309,81 @@ class ServeMetrics:
             lines.append(
                 f'neura_stream_events_total{{event="{event}"}} {self.counters[event]}'
             )
-        lines.append("# TYPE neura_stream_readout_latency_seconds summary")
+        family(
+            "neura_stream_readout_latency_seconds",
+            "summary",
+            "Feed-arrival-to-readout latency quantiles over the rolling window.",
+        )
         for q in (0.5, 0.99):
             lines.append(
                 f'neura_stream_readout_latency_seconds{{quantile="{q}"}} '
                 f"{self.readout_latency.percentile(q * 100, now):.6g}"
             )
-        lines.append("# TYPE neura_ticks_total counter")
+        # -- NeurA-Guard recovery / quarantine (repro.serve.supervisor) ------
+        family(
+            "neura_recovering",
+            "gauge",
+            "1 while the supervisor is restarting or replaying the journal.",
+        )
+        lines.append(f"neura_recovering {self.recovering}")
+        family(
+            "neura_recovery_total",
+            "counter",
+            "Engine restarts by kind (warm = host salvage, cold = journal replay).",
+        )
+        for kind in ("warm", "cold"):
+            lines.append(
+                f'neura_recovery_total{{kind="{kind}"}} '
+                f"{self.counters[f'recoveries_{kind}']}"
+            )
+        family(
+            "neura_recovery_seconds_total",
+            "counter",
+            "Cumulative wall seconds spent in restarts and journal replay.",
+        )
+        lines.append(f"neura_recovery_seconds_total {self.recovery_s:.6g}")
+        family(
+            "neura_recovery_events_total",
+            "counter",
+            "Recovery-path events (retries, slow ticks, replayed WAL records).",
+        )
+        for event in (
+            "tick_retries",
+            "slow_ticks",
+            "requests_resubmitted",
+            "journal_records_replayed",
+        ):
+            lines.append(
+                f'neura_recovery_events_total{{event="{event}"}} {self.counters[event]}'
+            )
+        family(
+            "neura_quarantine_lanes_total",
+            "counter",
+            "Lane slots condemned by the carry validity sweep.",
+        )
+        lines.append(f"neura_quarantine_lanes_total {self.counters['quarantined_lanes']}")
+        family(
+            "neura_quarantine_restarts_total",
+            "counter",
+            "Requests restarted from a seam after their lane was quarantined.",
+        )
+        lines.append(
+            f"neura_quarantine_restarts_total {self.counters['quarantine_restarts']}"
+        )
+        family("neura_ticks_total", "counter", "Jitted chunk advances dispatched.")
         lines.append(f"neura_ticks_total {self.n_ticks}")
-        lines.append("# TYPE neura_steps_total counter")
+        family("neura_steps_total", "counter", "Simulated time steps advanced.")
         lines.append(f"neura_steps_total {self.n_steps}")
-        lines.append("# TYPE neura_dispatch_seconds_total counter")
+        family(
+            "neura_dispatch_seconds_total",
+            "counter",
+            "Cumulative host scheduling/bookkeeping wall seconds.",
+        )
         lines.append(f"neura_dispatch_seconds_total {self.dispatch_s:.6g}")
-        lines.append("# TYPE neura_tick_seconds_total counter")
+        family(
+            "neura_tick_seconds_total",
+            "counter",
+            "Cumulative jitted-advance wall seconds (readback included).",
+        )
         lines.append(f"neura_tick_seconds_total {self.tick_s:.6g}")
         return "\n".join(lines) + "\n"

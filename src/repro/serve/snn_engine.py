@@ -86,7 +86,7 @@ import numpy as np
 
 from repro.core import hw_model
 from repro.core import shard as shard_lib
-from repro.core.fixed_point import int_max
+from repro.core.fixed_point import int_max, int_min
 from repro.core.backend import (
     EventBackend,
     InferenceBackend,
@@ -167,6 +167,7 @@ class SNNRequest:
     status: str | None = None  # "completed" | "degraded" | "rejected"
     tier: str | None = None  # "full" | registered tier name (None if rejected)
     preemptions: int = 0
+    restarts: int = 0  # quarantine / crash-recovery re-admissions
     admitted_seq: int | None = None  # first-admission order (FIFO property)
     _arrival_wall: float | None = dataclasses.field(default=None, repr=False)
     _net: "NetworkConfig | None" = dataclasses.field(default=None, repr=False)
@@ -354,6 +355,7 @@ class _Lane:
     counts: np.ndarray | None = None  # [n_classes] running output spikes
     layer_events: list = dataclasses.field(default_factory=list)  # per tick [L]
     step_out: list | None = None  # per tick [valid, n_classes] (streaming readout)
+    carry0: list | None = None  # chunk-start carry snapshot (quarantine restart)
 
 
 class SNNServeEngine:
@@ -430,6 +432,8 @@ class SNNServeEngine:
         precision_tiers: Sequence[PrecisionTier] = (),
         max_idle_ticks: int | None = 1000,
         metrics_window_s: float = 60.0,
+        journal=None,
+        faults=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -466,6 +470,18 @@ class SNNServeEngine:
         self.tiers: tuple[PrecisionTier, ...] = tuple(precision_tiers)
         self.max_idle_ticks = max_idle_ticks
         self.metrics = ServeMetrics(metrics_window_s)
+        # -- NeurA-Guard durability / chaos seams ----------------------------
+        # ``journal`` (repro.serve.journal.Journal) records admissions and
+        # terminal states for crash recovery; ``faults`` (repro.serve.faults.
+        # FaultInjector) threads the chaos injector's tick/carry sites
+        # through the serve loop.  Both default off and cost nothing when
+        # absent.
+        self.journal = journal
+        self.faults = faults
+        self.stop_admission = False  # graceful drain: refuse new submits
+        # Slots the supervisor's validity sweep condemned: they hold no
+        # lane, never admit, and only an engine restart reclaims them.
+        self._quarantined: set[int] = set()
 
         self._dmesh = None
         if data_parallel is not None and data_parallel > 1:
@@ -531,7 +547,16 @@ class SNNServeEngine:
 
     @property
     def free_lanes(self) -> int:
-        return self.max_batch - self.active_lanes
+        return self.max_batch - self.active_lanes - len(self._quarantined)
+
+    @property
+    def capacity(self) -> int:
+        """Lanes not condemned by quarantine (active or free)."""
+        return self.max_batch - len(self._quarantined)
+
+    @property
+    def quarantined(self) -> frozenset:
+        return frozenset(self._quarantined)
 
     @property
     def in_flight(self) -> bool:
@@ -540,6 +565,10 @@ class SNNServeEngine:
     # -- admission ----------------------------------------------------------
     def submit(self, req: SNNRequest) -> None:
         """Queue a request (arrival stamped now unless ``run`` set it)."""
+        if self.stop_admission:
+            raise RuntimeError(
+                f"request {req.uid}: engine is draining, admission is stopped"
+            )
         if req.raster.shape[1] != self.net.n_in:
             raise ValueError(
                 f"request {req.uid}: raster has {req.raster.shape[1]} channels, "
@@ -547,6 +576,19 @@ class SNNServeEngine:
             )
         if req._arrival_wall is None:
             req._arrival_wall = time.perf_counter()
+        # WAL: the admission must survive a crash.  Streaming chunk requests
+        # are *not* journaled here -- the session manager journals the feed
+        # itself (recovery rebuilds chunks from the session's carry seam, so
+        # engine-level chunk records would double-count the stream).
+        if self.journal is not None and not req._want_carry:
+            self.journal.append(
+                "submit",
+                arrays={"raster": req.raster},
+                uid=req.uid,
+                priority=int(req.priority),
+                tenant=req.tenant,
+                deadline_s=req.deadline_s,
+            )
         self.metrics.inc("submitted")
         self.sched.add(req)
 
@@ -595,7 +637,7 @@ class SNNServeEngine:
 
     def _free_lane(self) -> int | None:
         for i, lane in enumerate(self._lanes):
-            if lane is None:
+            if lane is None and i not in self._quarantined:
                 return i
         return None
 
@@ -718,9 +760,12 @@ class SNNServeEngine:
         if req._carry_in is not None:
             # a streaming chunk resumes its stream's persistent carry: write
             # the snapshot over whatever the slot last held instead of
-            # zeroing (fresh=False keeps the reset flag off)
+            # zeroing (fresh=False keeps the reset flag off).  carry0 keeps
+            # the chunk-start snapshot on the host so a quarantine can
+            # restart this chunk from its own seam, not from stream zero.
             self._states = lane_state_put(self._states, slot, req._carry_in)
             lane.fresh = False
+            lane.carry0 = req._carry_in
             req._carry_in = None
         self._lanes[slot] = lane
 
@@ -818,6 +863,8 @@ class SNNServeEngine:
         active = [i for i, lane in enumerate(self._lanes) if lane is not None]
         if not active:
             return []
+        if self.faults is not None:
+            self.faults.on_tick()  # chaos: may stall, raise, or "kill"
         k = self._chunk_len(active)
         dtype = (
             np.uint8
@@ -884,6 +931,12 @@ class SNNServeEngine:
             lane.t += valid
             if lane.t >= lane.req.n_steps:
                 finished.append(self._complete_lane(i, now))
+        if self.faults is not None:
+            # chaos: corrupt a still-active lane's carry *after* the tick's
+            # saturate ran (so the corruption survives until the validity
+            # sweep, exactly like a mid-window bit flip on real hardware)
+            still = [i for i in active if self._lanes[i] is not None]
+            self._states, _ = self.faults.poison_carry(self._states, still)
         return finished
 
     def _complete_lane(self, slot: int, now: float) -> SNNRequest:
@@ -946,11 +999,79 @@ class SNNServeEngine:
     def _finalize(self, req: SNNRequest) -> None:
         """Invoke the completion callback; a raising callback is counted
         and contained -- it must never take the serving loop down."""
+        # WAL: the terminal state lands before the callback runs, so a
+        # crash inside a callback still replays as "served" (streaming
+        # chunks are the manager's to journal, not ours)
+        if self.journal is not None and not req._want_carry:
+            self.journal.append("done", uid=req.uid, status=req.status)
         if req.on_complete is not None:
             try:
                 req.on_complete(req)
             except Exception:
                 self.metrics.inc("callback_failures")
+
+    # -- NeurA-Guard: carry validity + lane quarantine -----------------------
+    def sweep_carries(self) -> list[int]:
+        """Validity sweep over the active lanes' device carries.
+
+        A healthy carry is bounded by construction: the jitted tick
+        saturates ``u`` into the layer's ``u_bits`` range and ``i_syn``
+        into ``i_bits``, and ``prev_spk`` is binary.  Anything outside
+        those bounds (or non-finite, for float-typed leaves) can only be
+        corruption -- a bit flip, a bad DMA, an injected fault -- and the
+        lane's trajectory is no longer trustworthy.  Returns the slots
+        that fail; the supervisor quarantines them.
+        """
+        bad: list[int] = []
+        for slot, lane in enumerate(self._lanes):
+            if lane is None:
+                continue
+            carry = lane_state_take(self._states, slot)
+            for st, cfg in zip(carry, self.net.layers):
+                u = np.asarray(st.u)
+                i_syn = np.asarray(st.i_syn)
+                spk = np.asarray(st.prev_spk)
+                ok = (
+                    np.all(np.isfinite(u.astype(np.float64)))
+                    and np.all(np.isfinite(i_syn.astype(np.float64)))
+                    and int(u.min(initial=0)) >= int_min(cfg.u_bits)
+                    and int(u.max(initial=0)) <= int_max(cfg.u_bits)
+                    and int(i_syn.min(initial=0)) >= int_min(cfg.i_bits)
+                    and int(i_syn.max(initial=0)) <= int_max(cfg.i_bits)
+                    and int(spk.min(initial=0)) >= 0
+                    and int(spk.max(initial=0)) <= 1
+                )
+                if not ok:
+                    bad.append(slot)
+                    break
+        return bad
+
+    def quarantine_lane(self, slot: int) -> SNNRequest | None:
+        """Condemn a lane slot and salvage its request.
+
+        The slot never admits again (only an engine restart reclaims it).
+        The resident request restarts from its last trustworthy seam: a
+        streaming chunk re-enters the queue carrying its chunk-start carry
+        snapshot (``carry0``), anything else restarts from admission --
+        both bit-exact, because everything computed *on* the corrupt lane
+        is discarded.  Returns the requeued request (``None`` for an
+        already-empty slot).
+        """
+        if not 0 <= slot < self.max_batch:
+            raise ValueError(f"no lane slot {slot}")
+        self._quarantined.add(slot)
+        lane = self._lanes[slot]
+        self._lanes[slot] = None
+        if lane is None:
+            return None
+        req = lane.req
+        req.restarts += 1
+        req._suspended = None
+        req._carry_in = lane.carry0  # chunk-start seam (None = fresh restart)
+        self.sched.requeue_front(req)
+        self.metrics.inc("quarantined_lanes")
+        self.metrics.inc("quarantine_restarts")
+        return req
 
     def warmup(
         self,

@@ -251,6 +251,15 @@ class StreamSessionManager:
         # read through: engine.warmup() swaps in a fresh ServeMetrics
         return self.engine.metrics
 
+    @property
+    def _journal(self):
+        # read through to the engine's WAL (wired by the supervisor): the
+        # manager journals the *session* record stream -- open / feed /
+        # evict / close -- while the engine deliberately skips journaling
+        # the chunk requests themselves (they are derived state; recovery
+        # rebuilds them from these records + the checkpointed carry seam)
+        return self.engine.journal
+
     # -- accounting (the soak test's conservation invariants) ----------------
     def conservation(self) -> dict:
         live = sum(s.state == "live" for s in self.sessions.values())
@@ -289,6 +298,15 @@ class StreamSessionManager:
         s = StreamSession(sid=sid, config=cfg)
         self.sessions[sid] = s
         self.n_opened += 1
+        if self._journal is not None:
+            self._journal.append(
+                "session_open",
+                sid=sid,
+                config={
+                    k: int(v) if isinstance(v, Priority) else v
+                    for k, v in overrides.items()
+                },
+            )
         self.metrics.inc("sessions_opened")
         self._update_gauges()
         return s
@@ -314,6 +332,13 @@ class StreamSessionManager:
                 f"({s.pending_steps} + {chunk.shape[0]} > "
                 f"{s.config.max_pending_steps} steps); drain before feeding more"
             )
+        if self._journal is not None:
+            # the accepted steps must survive a crash: record them with the
+            # session's pre-feed global offset, so recovery can reassemble
+            # the stream suffix by offset (overlap-safe across recoveries)
+            self._journal.append(
+                "feed", arrays={"chunk": chunk}, sid=sid, start=s.fed_steps
+            )
         s.pending.append(chunk)
         s.pending_steps += chunk.shape[0]
         s.fed_steps += chunk.shape[0]
@@ -335,6 +360,8 @@ class StreamSessionManager:
         s.pending_steps = 0
         s.carry = None
         s._tail = None
+        if self._journal is not None:
+            self._journal.append("session_close", sid=sid)
         self.metrics.inc("sessions_closed")
         self._update_gauges()
         summary = s.summary()
@@ -467,7 +494,9 @@ class StreamSessionManager:
         import pathlib
 
         return Checkpointer(
-            pathlib.Path(self.checkpoint_dir) / sid, keep=self.keep_checkpoints
+            pathlib.Path(self.checkpoint_dir) / sid,
+            keep=self.keep_checkpoints,
+            faults=self.engine.faults,  # chaos: torn-checkpoint injection
         )
 
     def _carry_template(self) -> list:
@@ -509,6 +538,11 @@ class StreamSessionManager:
         s._tail = None
         s.state = "evicted"
         s.n_evictions += 1
+        if self._journal is not None:
+            # journaled strictly *after* the blocking save committed: a
+            # crash in between leaves the checkpoint ahead of the journal,
+            # which recovery resolves in the checkpoint's favour
+            self._journal.append("evict", sid=sid, t_total=s.t_total)
         self.metrics.inc("sessions_evicted")
         self._update_gauges()
 

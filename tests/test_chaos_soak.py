@@ -1,0 +1,119 @@
+"""Chaos soak: randomized multi-fault churn with sampled serial replays.
+
+Marked ``slow`` (nightly only; tier-1 deselects it via the default ``-m
+"not slow"``).  ``FaultInjector.from_seed`` derives a deterministic
+fault schedule per round -- random mixes of tick exceptions, carry
+poisonings, and simulated process kills over the first dozens of ticks
+-- and a :class:`~repro.serve.supervisor.SupervisedEngine` with a
+write-ahead journal must serve every admitted request through it.
+
+Invariants, asserted every round:
+
+* **no request lost** -- every admitted uid reaches a terminal result;
+* **no double-serve** -- with a synchronous journal (``fsync_every=1``)
+  every completion is durable before its callback, so no uid may yield
+  two results;
+* **conservation at every poll** -- completed and engine-resident uids
+  are disjoint and jointly cover every admission;
+
+and per round a sampled subset of results is replayed against a serial
+``run_int`` of the same raster -- bit-exact, regardless of how many
+restarts, quarantines, and journal replays the request lived through.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.network import (
+    NetworkConfig,
+    init_float_params,
+    quantize_params,
+    run_int,
+)
+from repro.core.snn_layer import LayerConfig, NeuronModel
+from repro.serve.faults import FaultInjector
+from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+from repro.serve.supervisor import SupervisedEngine
+
+SEED = 20260808
+N_ROUNDS = 12
+N_REQUESTS = 24
+SAMPLES_PER_ROUND = 6
+
+NET = NetworkConfig(
+    layers=(
+        LayerConfig(n_in=16, n_out=10, neuron=NeuronModel.LIF, beta=0.9),
+        LayerConfig(n_in=10, n_out=4, neuron=NeuronModel.LIF, beta=0.77),
+    ),
+    n_steps=8,
+)
+_params = init_float_params(jax.random.PRNGKey(0), NET)
+QPARAMS, _ = quantize_params(NET, _params)
+
+
+def _serial(raster):
+    rec = run_int(NET, QPARAMS, jnp.asarray(raster[:, None, :], jnp.int32))
+    return np.asarray(rec.spike_counts)[0]
+
+
+@pytest.mark.slow
+def test_chaos_soak_randomized_faults_with_sampled_serial_replays(tmp_path):
+    rng = np.random.default_rng(SEED)
+    totals = {"tick": 0, "carry": 0, "kill": 0, "warm": 0, "cold": 0}
+    for round_idx in range(N_ROUNDS):
+        inj = FaultInjector.from_seed(
+            int(rng.integers(2**31)),
+            n_faults=int(rng.integers(2, 6)),
+            horizon=24,
+            sites=("tick", "carry", "kill"),
+        )
+        sup = SupervisedEngine(
+            lambda: SNNServeEngine(NET, QPARAMS, max_batch=4, tick_stride=2),
+            journal_dir=tmp_path / f"wal{round_idx}",
+            journal_fsync_every=1,
+            faults=inj,
+            max_tick_retries=1,
+            backoff_s=1e-4,
+        )
+        rasters = {}
+        for uid in range(N_REQUESTS):
+            T = int(rng.choice([4, 8]))
+            raster = (rng.random((T, NET.n_in)) < 0.4).astype(np.uint8)
+            rasters[uid] = raster
+            sup.submit(SNNRequest(uid=uid, raster=raster))
+
+        completed = {}
+        while sup.in_flight:
+            for req in sup.poll():
+                assert req.uid not in completed, (
+                    f"round {round_idx}: uid {req.uid} double-served"
+                )
+                completed[req.uid] = req
+            eng = sup.engine
+            resident = {lane.req.uid for lane in eng._lanes if lane is not None}
+            resident |= {r.uid for r in eng.sched}
+            assert not (set(completed) & resident)
+            assert set(completed) | resident == set(rasters), (
+                f"round {round_idx}: requests lost"
+            )
+        assert sorted(completed) == sorted(rasters)
+
+        for uid in rng.choice(N_REQUESTS, SAMPLES_PER_ROUND, replace=False):
+            req = completed[int(uid)]
+            assert req.status == "completed"
+            np.testing.assert_array_equal(
+                req.spike_counts, _serial(rasters[int(uid)]),
+                err_msg=f"round {round_idx} uid {uid}: not bit-exact vs run_int",
+            )
+
+        for site in ("tick", "carry", "kill"):
+            totals[site] += sum(1 for s, _, _ in inj.fired if s == site)
+        totals["warm"] += sup.metrics.counters["recoveries_warm"]
+        totals["cold"] += sup.metrics.counters["recoveries_cold"]
+        sup.close()
+
+    # the schedule generator must actually have exercised the machinery
+    assert totals["cold"] >= 1, f"no kill ever fired: {totals}"
+    assert totals["tick"] + totals["carry"] >= 1, totals

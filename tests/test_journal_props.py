@@ -1,0 +1,181 @@
+"""Journal replay-idempotency properties (hypothesis-driven).
+
+The recovery contract is a *fold*: ``recover()`` keys records by request
+uid / session sid, so replaying any journal prefix (a crash), acting on
+it (re-journaling the recovery's own re-submissions and re-feeds), and
+replaying again must converge on the same outstanding-work set -- no
+request lost, none double-admitted, no session step fed twice or
+skipped.  These properties hammer that contract with random admission /
+completion interleavings, random crash points (byte-level torn tails
+included), and random chunk schedules with evict watermarks, checking
+the fold against an independent dict/set model.
+
+hypothesis is a CI-only dependency (requirements-dev.txt): the module
+skips cleanly where it is not installed.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.serve.journal import Journal, read_records, recover
+
+_SETTINGS = dict(
+    deadline=None, suppress_health_check=[HealthCheck.function_scoped_fixture]
+)
+
+
+def _raster(T, seed, n_in=8):
+    rng = np.random.default_rng(seed)
+    return (rng.random((T, n_in)) < 0.4).astype(np.uint8)
+
+
+# ops: ("submit", uid) admits (or re-admits) uid; ("done", uid) completes it.
+@st.composite
+def _request_histories(draw):
+    n = draw(st.integers(1, 12))
+    ops = []
+    submitted = []
+    for uid in range(n):
+        ops.append(("submit", uid))
+    # interleave: completions may only follow their submit
+    order = draw(st.permutations(list(range(n))))
+    done = draw(st.sets(st.sampled_from(list(range(n))), max_size=n))
+    seq = []
+    for uid in order:
+        seq.append(("submit", uid))
+        submitted.append(uid)
+        for d in list(done):
+            # flush a random subset of eligible completions after each admit
+            if d in submitted and draw(st.booleans()):
+                seq.append(("done", d))
+                done.discard(d)
+    for d in sorted(done):
+        if d in submitted:
+            seq.append(("done", d))
+    return seq
+
+
+@given(history=_request_histories(), crash_frac=st.floats(0.0, 1.0))
+@settings(max_examples=30, **_SETTINGS)
+def test_prefix_replay_matches_model_and_never_duplicates(
+    tmp_path_factory, history, crash_frac
+):
+    tmp = tmp_path_factory.mktemp("wal")
+    cut = int(round(crash_frac * len(history)))
+    prefix = history[:cut]
+    with Journal(tmp, fsync_every=1) as j:
+        for kind, uid in prefix:
+            if kind == "submit":
+                j.append("submit", arrays={"raster": _raster(4, uid)}, uid=uid)
+            else:
+                j.append("done", uid=uid, status="completed")
+    state = recover(tmp)
+    # independent model: last submit without a later done is outstanding
+    model = set()
+    for kind, uid in prefix:
+        (model.add if kind == "submit" else model.discard)(uid)
+    uids = [r["uid"] for r in state.requests]
+    assert sorted(uids) == sorted(model)
+    assert len(uids) == len(set(uids))  # a fold cannot double-admit
+    for r in state.requests:
+        np.testing.assert_array_equal(r["raster"], _raster(4, r["uid"]))
+
+
+@given(history=_request_histories(), crash_frac=st.floats(0.0, 1.0))
+@settings(max_examples=30, **_SETTINGS)
+def test_recovery_rejournal_then_second_crash_converges(
+    tmp_path_factory, history, crash_frac
+):
+    """Crash, recover, re-journal the recovery (as ``apply()`` does via
+    the engine's journaled re-submissions), crash again, recover again:
+    the second recovery must equal the first -- idempotent replay."""
+    tmp = tmp_path_factory.mktemp("wal")
+    cut = int(round(crash_frac * len(history)))
+    with Journal(tmp, fsync_every=1) as j:
+        for kind, uid in history[:cut]:
+            if kind == "submit":
+                j.append("submit", arrays={"raster": _raster(4, uid)}, uid=uid)
+            else:
+                j.append("done", uid=uid, status="completed")
+    first = recover(tmp)
+    with Journal(tmp, fsync_every=1) as j:  # recovery re-admits everything
+        for r in first.requests:
+            j.append("submit", arrays={"raster": r["raster"]}, uid=r["uid"])
+    second = recover(tmp)  # immediate second crash, before any completion
+    assert sorted(r["uid"] for r in second.requests) == sorted(
+        r["uid"] for r in first.requests
+    )
+
+
+@given(
+    n_records=st.integers(1, 15),
+    cut_bytes=st.integers(1, 400),
+)
+@settings(max_examples=30, **_SETTINGS)
+def test_byte_level_torn_tail_always_yields_a_clean_prefix(
+    tmp_path_factory, n_records, cut_bytes
+):
+    tmp = tmp_path_factory.mktemp("wal")
+    with Journal(tmp, fsync_every=1) as j:
+        for i in range(n_records):
+            j.append("submit", arrays={"raster": _raster(4, i)}, uid=i)
+    seg = sorted(tmp.glob("segment_*.wal"))[-1]
+    data = seg.read_bytes()
+    seg.write_bytes(data[: max(0, len(data) - cut_bytes)])
+    uids = [r.fields["uid"] for r in read_records(tmp)]
+    assert uids == list(range(len(uids)))  # a prefix, never a gap or garbage
+    with Journal(tmp, fsync_every=1) as j:  # and the repair resumes cleanly
+        j.append("submit", uid=999)
+    assert [r.fields["uid"] for r in read_records(tmp)][-1] == 999
+
+
+@st.composite
+def _chunk_schedules(draw):
+    total = draw(st.integers(1, 40))
+    edges = sorted(
+        draw(st.sets(st.integers(1, max(1, total - 1)), max_size=6)) | {0, total}
+    )
+    evict_after = draw(st.sets(st.integers(0, max(0, len(edges) - 2)), max_size=2))
+    return total, edges, evict_after
+
+
+@given(sched=_chunk_schedules(), refeed=st.booleans())
+@settings(max_examples=40, **_SETTINGS)
+def test_session_suffix_assembly_covers_exactly_the_unfed_steps(
+    tmp_path_factory, sched, refeed
+):
+    """The fold's pruned feed list must reconstruct raster[ckpt_t:fed]
+    gaplessly -- including when a prior recovery re-fed overlapping
+    records (identical bytes at the same global offsets)."""
+    total, edges, evict_after = sched
+    stream = _raster(total, seed=7)
+    tmp = tmp_path_factory.mktemp("wal")
+    with Journal(tmp, fsync_every=1) as j:
+        j.append("session_open", sid="s", config={"window": 4, "stride": 2})
+        for i in range(len(edges) - 1):
+            j.append("feed", arrays={"chunk": stream[edges[i]:edges[i + 1]]},
+                     sid="s", start=edges[i])
+            if i in evict_after:
+                j.append("evict", sid="s", t_total=edges[i + 1])
+        if refeed and len(edges) > 2:
+            # overlap: a recovery re-fed the last two chunks as one record
+            j.append("feed", arrays={"chunk": stream[edges[-3]:]},
+                     sid="s", start=edges[-3])
+    s = recover(tmp).sessions["s"]
+    f0 = s.ckpt_t or 0
+    assert s.fed_steps == total
+    # assemble exactly as RecoveredState.apply does
+    if f0 < total:
+        buf = np.zeros((total - f0, stream.shape[1]), stream.dtype)
+        covered = np.zeros(total - f0, bool)
+        for start, chunk in s.feeds:
+            lo = max(start, f0)
+            buf[lo - f0 : start + chunk.shape[0] - f0] = chunk[lo - start :]
+            covered[lo - f0 : start + chunk.shape[0] - f0] = True
+        assert covered.all()
+        np.testing.assert_array_equal(buf, stream[f0:])
