@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.backend import available_backends
 from repro.core.flexplorer import annealer as annealer_lib
-from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.flexplorer.explorer import EvalSpec, SearchSpec, SNNSearchSpace, explore_snn
 from repro.core.network import NetworkConfig, init_float_params, quantize_params, run_int
 from repro.core.snn_layer import LayerConfig, NeuronModel
 from repro.data.snn_datasets import mnist_like
@@ -85,8 +85,9 @@ def _time_dse(net, params, ds, population: int) -> tuple[float, int, int]:
     jax.clear_caches()  # serial's per-candidate compile cost is the workload
     t0 = time.perf_counter()
     result = explore_snn(
-        net, params, ds, space=SPACE, anneal_cfg=ANNEAL, eval_batch=256,
-        population=population,
+        net, params, ds,
+        search=SearchSpec(space=SPACE, config=ANNEAL, population=population),
+        evaluate=EvalSpec(batch=256),
     )
     sec = time.perf_counter() - t0
     return sec, result.anneal.evaluations, result.anneal.requested_evaluations

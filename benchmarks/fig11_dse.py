@@ -18,7 +18,7 @@ import time
 
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.flexplorer import cost as cost_lib
-from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.flexplorer.explorer import EvalSpec, SearchSpec, SNNSearchSpace, explore_snn
 from repro.core.network import NetworkConfig
 from repro.core.snn_layer import LayerConfig, NeuronModel, Topology
 from repro.data.snn_datasets import dvs_like
@@ -45,11 +45,13 @@ def run(epochs: int = 5, T: int = 20, backend: str = "reference", population: in
         net,
         res_train.params,
         test,
-        space=SNNSearchSpace(ff_bits=(4, 8, 12, 16), rec_bits=(4, 8, 12, 16), leak_bits=(3, 8)),
-        weights=weights,
-        anneal_cfg=annealer_lib.AnnealConfig(t_start=1.0, t_min=0.02, alpha=0.6, eval_divisor=3, seed=0),
-        backend=backend,
-        population=population,
+        search=SearchSpec(
+            space=SNNSearchSpace(ff_bits=(4, 8, 12, 16), rec_bits=(4, 8, 12, 16), leak_bits=(3, 8)),
+            weights=weights,
+            config=annealer_lib.AnnealConfig(t_start=1.0, t_min=0.02, alpha=0.6, eval_divisor=3, seed=0),
+            population=population,
+        ),
+        evaluate=EvalSpec(backend=backend),
     )
     # figure data: every evaluated candidate, sorted by total cost
     rows = sorted(result.anneal.trace, key=lambda r: r["total"])

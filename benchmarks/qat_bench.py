@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flexplorer import annealer as annealer_lib
-from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.flexplorer.explorer import EvalSpec, RefineSpec, SearchSpec, SNNSearchSpace, explore_snn
 from repro.core.network import NetworkConfig, init_float_params
 from repro.core.snn_layer import LayerConfig, NeuronModel, Topology
 from repro.data.snn_datasets import dvs_like, mnist_like, shd_like
@@ -180,13 +180,17 @@ def run(fast: bool = False):
             net,
             res.params,
             test,
-            space=SNNSearchSpace(ff_bits=(2, 3, 4, 6), rec_bits=(2, 3, 4, 6), leak_bits=(3, 8)),
-            anneal_cfg=ANNEAL,
-            eval_batch=512,
-            refine_top_k=1 if fast else 2,
-            refine_train_ds=train,
-            refine_epochs=refine_epochs,
-            refine_lr=qat_lr,
+            search=SearchSpec(
+                space=SNNSearchSpace(ff_bits=(2, 3, 4, 6), rec_bits=(2, 3, 4, 6), leak_bits=(3, 8)),
+                config=ANNEAL,
+            ),
+            evaluate=EvalSpec(batch=512),
+            refine=RefineSpec(
+                top_k=1 if fast else 2,
+                train_ds=train,
+                epochs=refine_epochs,
+                lr=qat_lr,
+            ),
         )
         dse_s = time.perf_counter() - t0
         explored = dse.explored_front()

@@ -18,6 +18,9 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
                devices (worker subprocesses; BENCH_shard.json)
   qat       -- post-training quant vs quantization-aware training accuracy
                at w_bits 2/3/4 + refined-front DSE (BENCH_qat.json)
+  dse       -- search-strategy quality: anneal vs NSGA-II front hypervolume
+               at equal budget, resume fidelity, population-sweep
+               candidates/sec at 1/4 forced host devices (BENCH_dse.json)
   roofline  -- per (arch x shape) roofline terms from the dry-run records
 
 Usage: python -m benchmarks.run [--only table1,roofline] [--fast]
@@ -40,7 +43,7 @@ import re
 import sys
 import traceback
 
-MODULES = ["cg_error", "kernels", "backend", "event", "serve", "shard", "qat", "roofline", "lm_dse", "table2", "table1", "fig11"]
+MODULES = ["cg_error", "kernels", "backend", "event", "serve", "shard", "qat", "dse", "roofline", "lm_dse", "table2", "table1", "fig11"]
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_DIR = _ROOT / "benchmarks" / "baselines"
@@ -96,6 +99,10 @@ def _rows(name: str, fast: bool):
         from benchmarks import qat_bench
 
         return qat_bench.run(fast=fast)
+    if name == "dse":
+        from benchmarks import dse_bench
+
+        return dse_bench.run(fast=fast)
     if name == "roofline":
         from benchmarks import roofline
 

@@ -22,7 +22,7 @@ import numpy as np
 from repro.core import hw_model
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.flexplorer import cost as cost_lib
-from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.flexplorer.explorer import RefineSpec, SearchSpec, SNNSearchSpace, explore_snn
 from repro.core.network import NetworkConfig
 from repro.core.snn_layer import LayerConfig, NeuronModel, Topology
 from repro.data.snn_datasets import dvs_like
@@ -58,13 +58,12 @@ def main():
         net,
         res.params,
         test,
-        space=SNNSearchSpace(ff_bits=(3, 4, 6, 8), rec_bits=(3, 4, 6, 8), leak_bits=(3, 8)),
-        weights=cost_lib.CostWeights(c_hw=0.5, c_acc=0.5, c_lut=0.33, c_ff=0.33, c_bram=0.34),
-        anneal_cfg=annealer_lib.AnnealConfig(t_start=1.0, t_min=0.05, alpha=0.6, eval_divisor=3, seed=0),
-        refine_top_k=2,
-        refine_train_ds=train,
-        refine_epochs=3,
-        refine_lr=1.5e-3,
+        search=SearchSpec(
+            space=SNNSearchSpace(ff_bits=(3, 4, 6, 8), rec_bits=(3, 4, 6, 8), leak_bits=(3, 8)),
+            weights=cost_lib.CostWeights(c_hw=0.5, c_acc=0.5, c_lut=0.33, c_ff=0.33, c_bram=0.34),
+            config=annealer_lib.AnnealConfig(t_start=1.0, t_min=0.05, alpha=0.6, eval_divisor=3, seed=0),
+        ),
+        refine=RefineSpec(top_k=2, train_ds=train, epochs=3, lr=1.5e-3),
     )
     report = result.report()
     print("chosen configuration:", json.dumps(report["chosen"], indent=2, default=float))

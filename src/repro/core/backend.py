@@ -240,6 +240,16 @@ class ReferenceBackend(InferenceBackend):
 
     name = "reference"
 
+    # The reference backend has no configuration knobs, so any two
+    # instances are interchangeable: compare (and hash) by value so callers
+    # passing an explicit ReferenceBackend() are recognised as the default
+    # (the population-mode warning in explore_snn keys off this).
+    def __eq__(self, other) -> bool:
+        return type(other) is type(self)
+
+    def __hash__(self) -> int:
+        return hash((type(self).__module__, type(self).__qualname__))
+
     def run_int(self, net, qparams, spikes_in) -> SimRecord:
         return _run_step_major(
             net, list(qparams), spikes_in.astype(jnp.int32), int_layer_init, int_layer_step

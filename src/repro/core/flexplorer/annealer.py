@@ -17,16 +17,33 @@ The annealer is generic: knobs are named tuples of discrete values, and the
 caller supplies ``hw_cost_fn(cfg)`` and ``acc_fn(cfg)`` callbacks, so the
 same machinery drives both the SNN precision search and the LM-scale
 precision/roofline search.
+
+Since the strategy redesign the annealing logic itself lives in
+:mod:`repro.core.flexplorer.strategies` as :class:`AnnealStrategy` /
+:class:`PopulationAnnealStrategy` -- two implementations of the pluggable
+``SearchStrategy`` protocol, driven by the strategy-agnostic
+:func:`~repro.core.flexplorer.strategies.run_search` loop.  The functions
+here are the stable legacy entry points: they build the strategy, run the
+driver, and return the same result (bit-identical trajectory: the RNG draw
+order of the closed-loop implementations is preserved exactly).
+``AnnealResult`` is now an alias of the strategy-agnostic
+:class:`~repro.core.flexplorer.strategies.SearchResult` -- same field
+layout, so artifacts and imports from earlier PRs keep working.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import math
 from typing import Callable, Mapping, Sequence
 
-import numpy as np
+from repro.core.flexplorer.strategies import (
+    AnnealConfig,
+    AnnealStrategy,
+    PopulationAnnealStrategy,
+    SearchResult,
+    enumerate_configs,
+    neighbor as _neighbor,
+    run_search,
+)
 
 __all__ = [
     "AnnealConfig",
@@ -36,52 +53,8 @@ __all__ = [
     "simulated_annealing_population",
 ]
 
-
-@dataclasses.dataclass(frozen=True)
-class AnnealConfig:
-    t_start: float = 1.0
-    t_min: float = 1e-3
-    alpha: float = 0.85
-    eval_divisor: int = 2  # the paper's k: probe |cfgs|/k neighbours per temp
-    seed: int = 0
-
-
-@dataclasses.dataclass
-class AnnealResult:
-    best: tuple
-    best_cost: float
-    best_breakdown: dict
-    evaluations: int
-    trace: list[dict]  # every probed candidate: cfg, total/hw/acc/perf cost
-    cache: dict  # cfg -> (total, hw, acc_cost, accuracy, perf_cost)
-    # Of ``evaluations``, how many the search itself asked for (walker
-    # proposals / starts).  The population annealer additionally scores
-    # speculative lane-fill candidates; serial == evaluations.
-    requested_evaluations: int | None = None
-
-
-def enumerate_configs(knobs: Mapping[str, Sequence]) -> tuple[tuple[str, ...], list[tuple]]:
-    """Cartesian product of knob value lists -> (knob names, candidate tuples)."""
-    names = tuple(knobs.keys())
-    values = [list(v) for v in knobs.values()]
-    return names, list(itertools.product(*values))
-
-
-def _neighbor(cfg: tuple, knob_values: list[list], rng: np.random.Generator) -> tuple:
-    """Change exactly one knob to an adjacent value in its ordered list."""
-    cfg = list(cfg)
-    movable = [i for i, vals in enumerate(knob_values) if len(vals) > 1]
-    i = int(rng.choice(movable))
-    vals = knob_values[i]
-    j = vals.index(cfg[i])
-    if j == 0:
-        j2 = 1
-    elif j == len(vals) - 1:
-        j2 = j - 1
-    else:
-        j2 = j + int(rng.choice([-1, 1]))
-    cfg[i] = vals[j2]
-    return tuple(cfg)
+# Legacy alias: the annealer-shaped result is the uniform SearchResult.
+AnnealResult = SearchResult
 
 
 def simulated_annealing(
@@ -91,59 +64,25 @@ def simulated_annealing(
     acc_cost_fn: Callable[[float], float],
     anneal: AnnealConfig = AnnealConfig(),
     extra_cost_fn: Callable[[tuple], float] | None = None,
+    checkpointer=None,
+    snapshot_every: int = 1,
 ) -> AnnealResult:
     """``extra_cost_fn`` (optional) adds a per-candidate cost term evaluated
     *after* ``acc_fn`` for the same candidate -- the explorer uses it for the
     event-aware latency/energy cost, which reuses the simulation traffic the
-    accuracy evaluation just measured."""
-    names, cfgs = enumerate_configs(knobs)
-    knob_values = [list(v) for v in knobs.values()]
-    rng = np.random.default_rng(anneal.seed)
-
-    # Pre-compute hardware cost for every candidate (paper lines 8-13).
-    hw_cache = {cfg: float(hw_cost_fn(cfg)) for cfg in cfgs}
-    cache: dict[tuple, tuple] = {}
-    trace: list[dict] = []
-
-    def evaluate(cfg: tuple) -> float:
-        if cfg not in cache:
-            accuracy = float(acc_fn(cfg))
-            a_cost = float(acc_cost_fn(accuracy))
-            p_cost = float(extra_cost_fn(cfg)) if extra_cost_fn is not None else 0.0
-            total = hw_cache[cfg] + a_cost + p_cost
-            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy, p_cost)
-            trace.append(
-                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy, perf_cost=p_cost)
-            )
-        return cache[cfg][0]
-
-    cur = cfgs[int(rng.integers(len(cfgs)))]
-    cur_cost = evaluate(cur)
-    best, best_cost = cur, cur_cost
-
-    T = anneal.t_start
-    n_per_temp = max(1, math.ceil(len(cfgs) / anneal.eval_divisor))
-    while T > anneal.t_min:
-        for _ in range(n_per_temp):
-            nbr = _neighbor(cur, knob_values, rng)
-            nbr_cost = evaluate(nbr)
-            delta = nbr_cost - cur_cost
-            if delta <= 0 or rng.random() <= math.exp(-delta / T):
-                cur, cur_cost = nbr, nbr_cost
-                if cur_cost < best_cost:
-                    best, best_cost = cur, cur_cost
-        T *= anneal.alpha
-
-    total, hw, a_cost, accuracy, p_cost = cache[best]
-    return AnnealResult(
-        best=best,
-        best_cost=best_cost,
-        best_breakdown=dict(zip(names, best))
-        | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy, "perf_cost": p_cost},
-        evaluations=len(cache),
-        trace=trace,
-        cache=cache,
-        requested_evaluations=len(cache),
+    accuracy evaluation just measured.  ``checkpointer`` (optional, a
+    ``repro.checkpoint.Checkpointer``) makes the search resumable; see
+    :func:`~repro.core.flexplorer.strategies.run_search`."""
+    strategy = AnnealStrategy(knobs, anneal)
+    return run_search(
+        strategy,
+        knobs,
+        hw_cost_fn,
+        batch_acc_fn=lambda batch: [float(acc_fn(c)) for c in batch],
+        acc_cost_fn=acc_cost_fn,
+        extra_cost_fn=extra_cost_fn,
+        checkpointer=checkpointer,
+        snapshot_every=snapshot_every,
     )
 
 
@@ -156,6 +95,8 @@ def simulated_annealing_population(
     population: int = 8,
     extra_cost_fn: Callable[[tuple], float] | None = None,
     fill_width: int | None = None,
+    checkpointer=None,
+    snapshot_every: int = 1,
 ) -> AnnealResult:
     """Population-parallel annealing: propose/accept per population step.
 
@@ -187,71 +128,16 @@ def simulated_annealing_population(
     Returns the same :class:`AnnealResult` shape as
     :func:`simulated_annealing` (best incumbent across all walkers).
     """
-    if population < 1:
-        raise ValueError(f"population must be >= 1, got {population}")
-    fill_width = population if fill_width is None else max(fill_width, population)
-    names, cfgs = enumerate_configs(knobs)
-    knob_values = [list(v) for v in knobs.values()]
-    rng = np.random.default_rng(anneal.seed)
-
-    hw_cache = {cfg: float(hw_cost_fn(cfg)) for cfg in cfgs}
-    cache: dict[tuple, tuple] = {}
-    trace: list[dict] = []
-    requested: set[tuple] = set()
-
-    def evaluate_batch(batch: Sequence[tuple]) -> None:
-        requested.update(batch)
-        fresh = [c for c in dict.fromkeys(batch) if c not in cache]
-        if not fresh:
-            return
-        if len(fresh) < fill_width:
-            # speculative fill: score unseen candidates in the spare lanes
-            seen = cache.keys() | set(fresh)
-            pool = [c for c in cfgs if c not in seen]
-            order = rng.permutation(len(pool))[: fill_width - len(fresh)]
-            fresh += [pool[i] for i in order]
-        accs = batch_acc_fn(fresh)
-        for cfg, accuracy in zip(fresh, accs):
-            accuracy = float(accuracy)
-            a_cost = float(acc_cost_fn(accuracy))
-            p_cost = float(extra_cost_fn(cfg)) if extra_cost_fn is not None else 0.0
-            total = hw_cache[cfg] + a_cost + p_cost
-            cache[cfg] = (total, hw_cache[cfg], a_cost, accuracy, p_cost)
-            trace.append(
-                dict(cfg=dict(zip(names, cfg)), total=total, hw=hw_cache[cfg], acc_cost=a_cost, accuracy=accuracy, perf_cost=p_cost)
-            )
-
-    walkers = [cfgs[int(rng.integers(len(cfgs)))] for _ in range(population)]
-    evaluate_batch(walkers)
-    costs = [cache[w][0] for w in walkers]
-    best_i = int(np.argmin(costs))
-    best, best_cost = walkers[best_i], costs[best_i]
-
-    T = anneal.t_start
-    n_per_temp = max(1, math.ceil(len(cfgs) / anneal.eval_divisor))  # == serial
-    while T > anneal.t_min:
-        proposed = 0
-        while proposed < n_per_temp:
-            k = min(population, n_per_temp - proposed)
-            proposals = [_neighbor(walkers[i], knob_values, rng) for i in range(k)]
-            evaluate_batch(proposals)
-            for i, nbr in enumerate(proposals):
-                delta = cache[nbr][0] - costs[i]
-                if delta <= 0 or rng.random() <= math.exp(-delta / T):
-                    walkers[i], costs[i] = nbr, cache[nbr][0]
-                    if costs[i] < best_cost:
-                        best, best_cost = nbr, costs[i]
-            proposed += k
-        T *= anneal.alpha
-
-    total, hw, a_cost, accuracy, p_cost = cache[best]
-    return AnnealResult(
-        best=best,
-        best_cost=best_cost,
-        best_breakdown=dict(zip(names, best))
-        | {"hw_cost": hw, "acc_cost": a_cost, "accuracy": accuracy, "perf_cost": p_cost},
-        evaluations=len(cache),
-        trace=trace,
-        cache=cache,
-        requested_evaluations=len(requested),
+    strategy = PopulationAnnealStrategy(
+        knobs, anneal, population=population, fill_width=fill_width
+    )
+    return run_search(
+        strategy,
+        knobs,
+        hw_cost_fn,
+        batch_acc_fn=batch_acc_fn,
+        acc_cost_fn=acc_cost_fn,
+        extra_cost_fn=extra_cost_fn,
+        checkpointer=checkpointer,
+        snapshot_every=snapshot_every,
     )

@@ -2,9 +2,10 @@
 
     HwCost    = C_H * (C_LUT*LUT_n + C_FF*FF_n + C_BRAM*BRAM_n)
     AccCost   = C_A * (1 - hardware_aware_accuracy)
-    PerfCost  = C_P * (C_LAT*lat/lat_target + C_E*energy/energy_target)
+    PerfCost  = C_P * (C_LAT*lat/lat_target + C_E*energy/energy_target
+                       + C_BW*congestion)
     TotalCost = HwCost + AccCost + PerfCost    with C_H + C_A + C_P = 1,
-                C_LUT + C_FF + C_BRAM = 1,  C_LAT + C_E = 1
+                C_LUT + C_FF + C_BRAM = 1,  C_LAT + C_E + C_BW = 1
 
 Resource terms are normalised by the target device capacity (default: the
 paper's Xilinx Zynq-7000 XC7Z020).  The perf term normalises *measured*
@@ -13,7 +14,16 @@ simulated traffic) against a target budget (default: the paper's MNIST
 design point, 1.1 ms / 0.12 mJ) -- this is what lets the annealer trade
 precision for realistic event-dependent latency instead of worst-case
 dense cycles.  ``C_P`` defaults to 0, which recovers the paper's exact
-two-term objective.  The same weighted-sum structure is reused at LM scale
+two-term objective.
+
+The ``C_BW * congestion`` term is the memory-bandwidth bottleneck model
+(after the neuromorphic bottleneck-modeling analysis, arxiv 2511.21549):
+``congestion`` is how far the candidate's measured per-layer weight/state
+traffic demand (``hw_model.bandwidth_profile``) exceeds the device's
+sustainable memory bandwidth (``DeviceCapacity.mem_bw_bytes_s``), zero
+while the design fits.  ``C_BW`` defaults to 0 so every pre-existing
+score is reproduced bit-identically.  The same weighted-sum structure is
+reused at LM scale
 with roofline terms standing in for LUT/FF/BRAM (see
 ``repro.core.flexplorer.explorer.LMCandidateEvaluator``).
 """
@@ -38,10 +48,22 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class DeviceCapacity:
+    """Target-device resource budget the cost terms normalise against.
+
+    ``mem_bw_bytes_s`` is the sustainable external-memory bandwidth the
+    congestion term compares measured traffic demand against.  The default
+    is a single Zynq-7000 AXI HP port into DDR3 (~1.2 GB/s sustained of
+    the 64-bit x 150 MHz theoretical peak) -- the paper's MNIST anchor
+    design demands ~0.3 GB/s, comfortably uncongested, so the term only
+    bites for high-precision multi-core configurations that actually
+    saturate the port.
+    """
+
     luts: float
     ffs: float
     brams: float
     name: str = "device"
+    mem_bw_bytes_s: float = 1.2e9
 
 
 XC7Z020 = DeviceCapacity(luts=53_200, ffs=106_400, brams=140, name="XC7Z020")
@@ -69,14 +91,17 @@ class CostWeights:
     c_bram: float = 0.34
     c_lat: float = 0.5
     c_energy: float = 0.5
+    # Memory-bandwidth congestion weight (arxiv 2511.21549).  Default 0:
+    # the perf term is the paper-era latency/energy pair, bit-identically.
+    c_bw: float = 0.0
 
     def __post_init__(self):
         if abs(self.c_hw + self.c_acc + self.c_perf - 1.0) > 1e-9:
             raise ValueError("C_H + C_A + C_P must equal 1 (paper Eq. 7; C_P = 0 there)")
         if abs(self.c_lut + self.c_ff + self.c_bram - 1.0) > 1e-9:
             raise ValueError("C_LUT + C_FF + C_BRAM must equal 1 (paper Eq. 7)")
-        if abs(self.c_lat + self.c_energy - 1.0) > 1e-9:
-            raise ValueError("C_LAT + C_E must equal 1")
+        if abs(self.c_lat + self.c_energy + self.c_bw - 1.0) > 1e-9:
+            raise ValueError("C_LAT + C_E + C_BW must equal 1 (C_BW = 0 pre-bottleneck-model)")
 
 
 def hw_cost(res: CoreResources, w: CostWeights, dev: DeviceCapacity = XC7Z020) -> float:
@@ -95,11 +120,22 @@ def perf_cost(
     energy_j: float,
     w: CostWeights,
     targets: PerfTargets = PerfTargets(),
+    bw_congestion: float = 0.0,
 ) -> float:
-    """Event-aware performance cost: measured latency/energy vs budget."""
+    """Event-aware performance cost: measured latency/energy vs budget.
+
+    ``bw_congestion`` is the candidate's memory-bandwidth overshoot
+    (``hw_model.BandwidthProfile.congestion``): 0 while measured traffic
+    demand fits the device's ``mem_bw_bytes_s``, else the fractional
+    excess.  Weighted by ``C_BW`` (default 0 => identical float sequence
+    to the pre-bottleneck-model cost).
+    """
     lat_n = latency_s / targets.latency_s
     e_n = energy_j / targets.energy_j
-    return w.c_perf * (w.c_lat * lat_n + w.c_energy * e_n)
+    inner = w.c_lat * lat_n + w.c_energy * e_n
+    if w.c_bw:
+        inner += w.c_bw * bw_congestion
+    return w.c_perf * inner
 
 
 def total_cost(
@@ -110,6 +146,7 @@ def total_cost(
     latency_s: float | None = None,
     energy_j: float | None = None,
     targets: PerfTargets = PerfTargets(),
+    bw_congestion: float = 0.0,
 ) -> float:
     total = hw_cost(res, w, dev) + acc_cost(accuracy, w)
     if w.c_perf:
@@ -119,5 +156,5 @@ def total_cost(
                 "energy_j are required (omitting them would silently drop "
                 "the perf term and change the objective's scale)"
             )
-        total += perf_cost(latency_s, energy_j, w, targets)
+        total += perf_cost(latency_s, energy_j, w, targets, bw_congestion=bw_congestion)
     return total

@@ -57,6 +57,8 @@ __all__ = [
     "latency_seconds",
     "power_watts",
     "energy_per_image",
+    "BandwidthProfile",
+    "bandwidth_profile",
     "DesignPoint",
     "design_point",
 ]
@@ -356,6 +358,94 @@ def latency_seconds(
 
 
 # --------------------------------------------------------------------------
+# Memory-bandwidth bottleneck model (after arxiv 2511.21549)
+# --------------------------------------------------------------------------
+
+# The event-driven datapath's external-memory traffic per core per step:
+# every incoming ASPL fetches the full n_out-wide synaptic weight row
+# (FF-Integ), recurrent ASCLs fetch n_out weights under ATA-T but a single
+# source weight under ATA-F (REC-Integ), and the Leak/Spike sweep reads and
+# writes every neuron's packed state word once.  This mirrors the cycle
+# model above -- cycles and bytes both scale with measured event traffic --
+# which is exactly the bottleneck-modeling observation: for neuromorphic
+# accelerators the limiting resource at deployment is usually the memory
+# system, and it must be modeled from *traffic*, not peak compute.
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthProfile:
+    """Per-layer memory-traffic demand of one deployment at measured traffic.
+
+    ``layer_bytes_per_image`` -- external-memory bytes each core moves per
+    sample (weight rows + neuron-state read/write); ``duration_s`` -- the
+    pipelined per-sample latency the traffic is sustained over;
+    ``layer_demand_bytes_s`` / ``demand_bytes_s`` -- per-core and total
+    sustained bandwidth demand.  :meth:`congestion` turns the total into
+    the Flex-plorer's dimensionless penalty: 0 while demand fits the
+    device's sustainable bandwidth, else the fractional overshoot.
+    """
+
+    layer_bytes_per_image: tuple[float, ...]
+    duration_s: float
+
+    @property
+    def total_bytes_per_image(self) -> float:
+        return float(sum(self.layer_bytes_per_image))
+
+    @property
+    def layer_demand_bytes_s(self) -> tuple[float, ...]:
+        if self.duration_s <= 0:
+            return tuple(0.0 for _ in self.layer_bytes_per_image)
+        return tuple(b / self.duration_s for b in self.layer_bytes_per_image)
+
+    @property
+    def demand_bytes_s(self) -> float:
+        return float(sum(self.layer_demand_bytes_s))
+
+    def congestion(self, capacity_bytes_s: float) -> float:
+        """max(0, demand/capacity - 1): how far past the memory system the
+        design's sustained traffic runs (0 = uncongested)."""
+        if capacity_bytes_s <= 0:
+            raise ValueError(f"capacity must be > 0, got {capacity_bytes_s}")
+        return max(0.0, self.demand_bytes_s / capacity_bytes_s - 1.0)
+
+
+def _layer_state_bytes(cfg: LayerConfig) -> float:
+    """Bytes of one neuron's packed state word (byte-boundary rounded)."""
+    _, width_bits = _neuron_state_dims(cfg)
+    return width_bits / 8.0
+
+
+def bandwidth_profile(net: NetworkConfig, traffic: EventTraffic) -> BandwidthProfile:
+    """Memory-traffic demand of ``net`` at measured event traffic."""
+    T = traffic.n_steps
+    layer_bytes: list[float] = []
+    for li, cfg in enumerate(net.layers):
+        in_ev = (
+            traffic.input_events_per_step
+            if li == 0
+            else traffic.layer_events_per_step[li - 1]
+        )
+        rec_ev = np.zeros(T)
+        if cfg.is_recurrent:
+            rec_ev[1:] = traffic.layer_events_per_step[li][:-1]
+        # FF-Integ: one n_out-wide weight row per incoming ASPL
+        bytes_per_step = in_ev * (cfg.n_out * cfg.w_bits / 8.0)
+        # REC-Integ: full row under ATA-T, single source weight under ATA-F
+        if cfg.topology == Topology.ATA_T:
+            bytes_per_step = bytes_per_step + rec_ev * (cfg.n_out * cfg.w_rec_bits / 8.0)
+        elif cfg.topology == Topology.ATA_F:
+            bytes_per_step = bytes_per_step + rec_ev * (cfg.w_rec_bits / 8.0)
+        # Leak/Spike: read + write every neuron's state word once per step
+        bytes_per_step = bytes_per_step + 2.0 * cfg.n_out * _layer_state_bytes(cfg)
+        layer_bytes.append(float(bytes_per_step.sum()))
+    return BandwidthProfile(
+        layer_bytes_per_image=tuple(layer_bytes),
+        duration_s=latency_seconds(net, traffic),
+    )
+
+
+# --------------------------------------------------------------------------
 # The paper's MNIST operating point (solved from the published 1.1 ms)
 # --------------------------------------------------------------------------
 
@@ -474,22 +564,31 @@ def energy_per_image(net: NetworkConfig, latency_s: float, events_per_image) -> 
 
 @dataclasses.dataclass(frozen=True)
 class DesignPoint:
-    """One deployment's modeled operating figures at measured traffic."""
+    """One deployment's modeled operating figures at measured traffic.
+
+    ``bw_demand_bytes_s`` is the sustained external-memory bandwidth the
+    design draws at this traffic (0.0 for design points built before the
+    bottleneck model existed -- old serialized artifacts still load).
+    """
 
     latency_s: float
     power_w: float
     energy_per_image_j: float
     events_per_image: float
+    bw_demand_bytes_s: float = 0.0
 
 
 def design_point(net: NetworkConfig, traffic: EventTraffic) -> DesignPoint:
-    """Latency / power / energy of ``net`` at measured event traffic -- the
-    event-aware summary the Flex-plorer's perf cost term anneals against."""
+    """Latency / power / energy / bandwidth of ``net`` at measured event
+    traffic -- the event-aware summary the Flex-plorer's perf cost term
+    anneals against."""
     lat = latency_seconds(net, traffic)
     events = traffic.total_events_per_image
+    bw = bandwidth_profile(net, traffic)
     return DesignPoint(
         latency_s=lat,
         power_w=power_watts(net, events / lat if lat > 0 else 0.0),
         energy_per_image_j=energy_per_image(net, lat, events),
         events_per_image=events,
+        bw_demand_bytes_s=bw.demand_bytes_s,
     )

@@ -68,6 +68,8 @@ __all__ = [
     "make_mesh",
     "resolve_mesh",
     "pad_to_shards",
+    "host_bounds",
+    "allgather_hosts",
     "run_int_sharded",
     "run_float_sharded",
     "run_int_population_sharded",
@@ -189,6 +191,58 @@ def _record_parts(rec, spikes):
     if in_ev is None:
         in_ev = jnp.sum(spikes != 0, axis=-1)
     return rec.spike_counts, tuple(rec.layer_spikes), in_ev
+
+
+# --------------------------------------------------------------------------
+# Multi-host fan-out (fleet-scale DSE: candidate lists partitioned by host)
+# --------------------------------------------------------------------------
+
+
+def host_bounds(n: int, index: int | None = None, count: int | None = None) -> tuple[int, int]:
+    """Half-open slice [lo, hi) of ``n`` work items owned by this host.
+
+    ``n`` must be a multiple of the process count -- callers pad the work
+    axis to the host x device multiple first (exactly like
+    :func:`pad_to_shards` pads to the device multiple), so every host runs
+    an identically-shaped program.  ``index``/``count`` override the
+    runtime's process rank/size for testing.
+    """
+    if count is None:
+        count = compat.process_count()
+    if index is None:
+        index = compat.process_index()
+    if not 0 <= index < count:
+        raise ValueError(f"host index {index} outside [0, {count})")
+    if n % count:
+        raise ValueError(
+            f"work axis of {n} does not divide over {count} hosts; pad it "
+            f"to a multiple first (see pad_to_shards)"
+        )
+    per = n // count
+    return index * per, (index + 1) * per
+
+
+def allgather_hosts(local, count: int | None = None, gather=None):
+    """Concatenate each host's leading-axis slice back into the full axis.
+
+    The inverse of :func:`host_bounds` partitioning: every host contributes
+    its local results and receives the concatenation in rank order.  At
+    ``process_count() == 1`` (including the forced-host-device fallback)
+    this is the identity, so single-host code pays nothing.  ``gather``
+    injects a replacement for ``multihost_utils.process_allgather`` in
+    tests.
+    """
+    if count is None:
+        count = compat.process_count()
+    if count == 1:
+        return np.asarray(local)
+    if gather is None:  # pragma: no cover - needs a real multi-host runtime
+        from jax.experimental import multihost_utils
+
+        def gather(x):
+            return multihost_utils.process_allgather(x, tiled=True)
+
+    return np.asarray(gather(local))
 
 
 @functools.partial(jax.jit, static_argnames=("net", "backend"))

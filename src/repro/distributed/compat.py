@@ -12,6 +12,8 @@ both.
 from __future__ import annotations
 
 import inspect
+import os
+import warnings
 
 import jax
 
@@ -22,7 +24,14 @@ except ImportError:  # older jax: experimental namespace
 
 _SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
 
-__all__ = ["shard_map", "pcast_varying", "enable_compilation_cache"]
+__all__ = [
+    "shard_map",
+    "pcast_varying",
+    "enable_compilation_cache",
+    "process_count",
+    "process_index",
+    "maybe_init_distributed",
+]
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kwargs):
@@ -71,6 +80,67 @@ def enable_compilation_cache(cache_dir) -> bool:
     except (ImportError, AttributeError):  # pragma: no cover - internal API
         pass
     return True
+
+
+def process_count() -> int:
+    """Number of cooperating host processes (1 when ``jax.distributed`` is
+    not initialised -- including the forced-host-device fallback, where a
+    single process emulates many devices via
+    ``--xla_force_host_platform_device_count``)."""
+    try:
+        return int(jax.process_count())
+    except Exception:  # pragma: no cover - pre-init backends can raise
+        return 1
+
+
+def process_index() -> int:
+    """This host's rank in [0, process_count())."""
+    try:
+        return int(jax.process_index())
+    except Exception:  # pragma: no cover - pre-init backends can raise
+        return 0
+
+
+def maybe_init_distributed(
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+) -> bool:
+    """Initialise ``jax.distributed`` when a coordinator is configured.
+
+    Resolution order: explicit arguments, then the standard environment
+    (``JAX_COORDINATOR_ADDRESS`` / ``JAX_NUM_PROCESSES`` /
+    ``JAX_PROCESS_ID``).  With no coordinator configured this is a no-op
+    returning False -- the caller is in single-process mode, and fleet
+    fan-out falls back to this host's (possibly forced) local devices.
+    Initialisation failures degrade the same way with a warning rather
+    than killing the search.  Returns True when multi-process mode is up
+    (idempotent: an already-initialised runtime short-circuits).
+    """
+    addr = coordinator_address or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if addr is None:
+        return False
+    if process_count() > 1:
+        return True
+    if num_processes is None and "JAX_NUM_PROCESSES" in os.environ:
+        num_processes = int(os.environ["JAX_NUM_PROCESSES"])
+    if process_id is None and "JAX_PROCESS_ID" in os.environ:
+        process_id = int(os.environ["JAX_PROCESS_ID"])
+    try:
+        jax.distributed.initialize(
+            coordinator_address=addr,
+            num_processes=num_processes,
+            process_id=process_id,
+        )
+        return True
+    except Exception as e:  # pragma: no cover - depends on cluster env
+        warnings.warn(
+            f"jax.distributed.initialize({addr!r}) failed ({e}); continuing "
+            "single-process with local devices",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return False
 
 
 def pcast_varying(x, axis_name: str):

@@ -197,7 +197,7 @@ def test_traced_decay_matches_static():
 def test_explore_snn_population_mode_agrees_with_serial():
     """Population DSE scores every config it shares with serial identically."""
     from repro.core.flexplorer import annealer as annealer_lib
-    from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+    from repro.core.flexplorer.explorer import EvalSpec, SearchSpec, SNNSearchSpace, explore_snn
 
     net = _make_net(32, 16, 4, 6, NeuronModel.LIF, ResetMode.SUBTRACT)
     params = init_float_params(jax.random.PRNGKey(1), net)
@@ -206,8 +206,11 @@ def test_explore_snn_population_mode_agrees_with_serial():
     ds.labels = ds.labels % 4
     space = SNNSearchSpace(ff_bits=(4, 6, 8), leak_bits=(3, 8))
     cfg = annealer_lib.AnnealConfig(t_start=1.0, t_min=0.2, alpha=0.5, seed=0)
-    serial = explore_snn(net, params, ds, space=space, anneal_cfg=cfg, eval_batch=32)
-    pop = explore_snn(net, params, ds, space=space, anneal_cfg=cfg, eval_batch=32, population=4)
+    ev = EvalSpec(batch=32)
+    serial = explore_snn(net, params, ds, search=SearchSpec(space=space, config=cfg), evaluate=ev)
+    pop = explore_snn(
+        net, params, ds, search=SearchSpec(space=space, config=cfg, population=4), evaluate=ev
+    )
     shared = serial.anneal.cache.keys() & pop.anneal.cache.keys()
     assert shared  # both searches touched overlapping candidates
     for c in shared:
@@ -343,7 +346,7 @@ def test_explore_snn_event_aware_perf_cost():
     population modes score shared candidates identically on acc AND perf."""
     from repro.core.flexplorer import annealer as annealer_lib
     from repro.core.flexplorer import cost as cost_lib
-    from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+    from repro.core.flexplorer.explorer import EvalSpec, SearchSpec, SNNSearchSpace, explore_snn
 
     net = _make_net(32, 16, 4, 6, NeuronModel.LIF, ResetMode.SUBTRACT)
     params = init_float_params(jax.random.PRNGKey(1), net)
@@ -353,9 +356,13 @@ def test_explore_snn_event_aware_perf_cost():
     space = SNNSearchSpace(ff_bits=(4, 6, 8), leak_bits=(3, 8))
     cfg = annealer_lib.AnnealConfig(t_start=1.0, t_min=0.2, alpha=0.5, seed=0)
     w = cost_lib.CostWeights(c_hw=0.4, c_acc=0.4, c_perf=0.2)
-    serial = explore_snn(net, params, ds, space=space, anneal_cfg=cfg, eval_batch=32, weights=w)
+    ev = EvalSpec(batch=32)
+    serial = explore_snn(
+        net, params, ds, search=SearchSpec(space=space, config=cfg, weights=w), evaluate=ev
+    )
     pop = explore_snn(
-        net, params, ds, space=space, anneal_cfg=cfg, eval_batch=32, weights=w, population=4
+        net, params, ds,
+        search=SearchSpec(space=space, config=cfg, weights=w, population=4), evaluate=ev,
     )
     assert serial.anneal.best_breakdown["perf_cost"] > 0
     shared = serial.anneal.cache.keys() & pop.anneal.cache.keys()

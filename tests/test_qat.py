@@ -187,8 +187,8 @@ def test_refine_candidates_never_worse_than_ptq(tiny_trained):
 
 
 def test_explore_snn_refine_requires_train_ds(tiny_trained):
-    from repro.core.flexplorer.explorer import explore_snn
+    from repro.core.flexplorer.explorer import RefineSpec, explore_snn
 
     net, result, train, test = tiny_trained
     with pytest.raises(ValueError, match="refine_train_ds"):
-        explore_snn(net, result.params, test, refine_top_k=1)
+        explore_snn(net, result.params, test, refine=RefineSpec(top_k=1))

@@ -14,7 +14,7 @@ import pytest
 
 from repro.core.flexplorer import annealer as annealer_lib
 from repro.core.flexplorer import cost as cost_lib
-from repro.core.flexplorer.explorer import SNNSearchSpace, explore_snn
+from repro.core.flexplorer.explorer import SearchSpec, SNNSearchSpace, explore_snn
 from repro.core.network import NetworkConfig, quantize_params
 from repro.core.snn_layer import LayerConfig
 from repro.data.snn_datasets import dvs_like, mnist_like, shd_like
@@ -52,8 +52,10 @@ def test_flexplorer_dse_returns_valid_config(trained_mnist):
         net,
         result.params,
         test,
-        space=SNNSearchSpace(ff_bits=(4, 6, 8), leak_bits=(3, 8)),
-        anneal_cfg=annealer_lib.AnnealConfig(t_start=0.5, t_min=0.05, alpha=0.5, eval_divisor=3, seed=1),
+        search=SearchSpec(
+            space=SNNSearchSpace(ff_bits=(4, 6, 8), leak_bits=(3, 8)),
+            config=annealer_lib.AnnealConfig(t_start=0.5, t_min=0.05, alpha=0.5, eval_divisor=3, seed=1),
+        ),
     )
     report = res.report()
     assert report["chosen"]["ff_bits"] in (4, 6, 8)
